@@ -1,0 +1,78 @@
+"""Shared benchmark scaffolding: datasets, timing, CSV rows.
+
+Every module reproduces one paper table/figure on generated road-network-
+like data (DESIGN.md §6).  ``scale`` multiplies the paper's cardinalities
+(default 0.05 keeps the full suite to minutes on CPU; ``--scale 1.0``
+reproduces the published sizes).  The RT-RkNN method is timed with the
+``dense-ref`` backend — the vectorized jnp execution of the ray-cast stage,
+which is what the Pallas kernel computes on the TPU target (interpret-mode
+Pallas is a correctness tool, not a timing tool).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.baselines import STRTree, infzone_rknn, six_rknn, slice_rknn, tpl_rknn
+from repro.core.rknn import rt_rknn_query
+from repro.data.spatial import PAPER_DATASETS, facility_user_split, road_network_points
+
+DEFAULT_SCALE = 0.05
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(name: str, scale: float = DEFAULT_SCALE, seed: int = 0) -> np.ndarray:
+    n = max(2000, int(PAPER_DATASETS[name] * scale))
+    return road_network_points(n, seed=seed)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run_methods(F, U, q_indices, k, methods=("tpl", "inf", "slice", "rt"), tree=None):
+    """Mean runtime per query (s) for each method over ``q_indices``."""
+    if tree is None and ("six" in methods or "tpl" in methods):
+        tree = STRTree(F)
+    acc = {m: 0.0 for m in methods}
+    split = {m: [0.0, 0.0] for m in methods}
+    for qi in q_indices:
+        for m in methods:
+            t0 = time.perf_counter()
+            if m == "six":
+                _, info = six_rknn(F, U, qi, k, tree)
+            elif m == "tpl":
+                _, info = tpl_rknn(F, U, qi, k, tree)
+            elif m == "inf":
+                _, info = infzone_rknn(F, U, qi, k)
+            elif m == "slice":
+                _, info = slice_rknn(F, U, qi, k)
+            elif m == "rt":
+                r = rt_rknn_query(F, U, qi, k, backend="dense-ref")
+                info = dict(t_filter_s=r.t_filter_s, t_verify_s=r.t_verify_s)
+            else:
+                raise ValueError(m)
+            acc[m] += time.perf_counter() - t0
+            split[m][0] += info.get("t_filter_s", 0.0)
+            split[m][1] += info.get("t_verify_s", 0.0)
+    n = len(q_indices)
+    return (
+        {m: v / n for m, v in acc.items()},
+        {m: (a / n, b / n) for m, (a, b) in split.items()},
+    )
+
+
+def rows_to_csv(rows: list[dict]) -> str:
+    out = []
+    for r in rows:
+        out.append(f"{r['name']},{r['us_per_call']:.1f},{r.get('derived','')}")
+    return "\n".join(out)

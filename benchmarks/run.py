@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig9]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured artefact).
+``--scale 1.0`` reproduces the paper's dataset cardinalities (minutes to
+hours on CPU); the default keeps CI fast while preserving every comparison.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import bench_rknn
+from benchmarks.common import DEFAULT_SCALE
+
+BENCHES = [
+    ("table2", bench_rknn.table2_indexing),
+    ("fig7_8", bench_rknn.fig7_8_vary_k),
+    ("fig9", bench_rknn.fig9_large_k),
+    ("fig10", bench_rknn.fig10_datasize),
+    ("fig11_12", bench_rknn.fig11_12_facility),
+    ("fig13_14", bench_rknn.fig13_14_user),
+    ("fig15", bench_rknn.fig15_breakdown),
+    ("table3_fig16", bench_rknn.table3_fig16_occluders),
+    ("fig17", bench_rknn.fig17_no_rt),
+    ("backends", bench_rknn.backends_ablation),
+    ("mono", bench_rknn.mono_queries),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=DEFAULT_SCALE)
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows = fn(scale=args.scale)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+            continue
+        for r in rows:
+            derived = str(r.get("derived", "")).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+    print(f"# total wall: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: one RkNN query end-to-end, every backend, verified exact.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import rt_rknn_query, rknn_mono_query
+from repro.core.brute import rknn_brute_np
+from repro.data.spatial import facility_user_split, road_network_points
+
+
+def main() -> None:
+    # a road-network-like city: 100k points, 1000 facilities, rest users
+    points = road_network_points(100_000, seed=7)
+    facilities, users = facility_user_split(points, 1_000, seed=7)
+    q, k = 42, 10
+
+    print(f"|F|={len(facilities)}  |U|={len(users)}  query=facility#{q}  k={k}\n")
+
+    truth = rknn_brute_np(users, facilities, q, k)
+    for backend in ("dense", "dense-ref", "grid", "bvh", "brute"):
+        res = rt_rknn_query(facilities, users, q, k, backend=backend)
+        ok = np.array_equal(res.mask, truth)
+        extra = ""
+        if res.scene is not None:
+            extra = (f"  occluders={res.scene.n_occluders}/{len(facilities)} "
+                     f"(InfZone-style pruning)")
+        print(
+            f"{backend:10s}  |RkNN|={res.mask.sum():5d}  exact={ok}  "
+            f"filter={res.t_filter_s*1e3:7.1f}ms  verify={res.t_verify_s*1e3:7.1f}ms{extra}"
+        )
+        assert ok, backend
+
+    # monochromatic variant (paper §2.1): facilities querying facilities
+    mono = rknn_mono_query(facilities, q, k)
+    print(f"\nmonochromatic RkNN of facility #{q}: {mono.mask.sum()} results")
+    print("\nAll backends agree with the exact oracle — Lemma 3.4 in action.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""qwen2-7b [dense] — GQA kv=4, QKV bias [arXiv:2407.10671]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18_944,
+    vocab=152_064,
+    qkv_bias=True,
+    ffn_act="swiglu",
+    rope_theta=1e6,
+    sub_quadratic=False,
+)

@@ -1,0 +1,22 @@
+"""RT-RkNN core: the paper's contribution as a composable JAX module.
+
+Public surface:
+  * :func:`repro.core.rknn.rt_rknn_query` — one-call bichromatic RkNN
+  * :func:`repro.core.rknn.rknn_mono_query` — monochromatic variant
+  * :mod:`repro.core.scene` — per-query occluder scene construction
+  * :mod:`repro.core.baselines` — SIX / TPL / InfZone / SLICE comparators
+"""
+
+from repro.core.geometry import Rect
+from repro.core.rknn import BACKENDS, RkNNResult, rknn_mono_query, rt_rknn_query
+from repro.core.scene import Scene, build_scene
+
+__all__ = [
+    "Rect",
+    "Scene",
+    "build_scene",
+    "rt_rknn_query",
+    "rknn_mono_query",
+    "RkNNResult",
+    "BACKENDS",
+]

@@ -1,0 +1,14 @@
+"""From-scratch reimplementations of the paper's four baselines (§2.2).
+
+All share the STR R-tree substrate (``rtree.py``) the way the paper's
+baselines share R*-trees, and all are cross-validated against the exact
+brute-force oracle in ``tests/test_baselines.py``.
+"""
+
+from repro.core.baselines.infzone import infzone_rknn
+from repro.core.baselines.rtree import STRTree
+from repro.core.baselines.six import six_rknn
+from repro.core.baselines.slice import slice_rknn
+from repro.core.baselines.tpl import tpl_rknn
+
+__all__ = ["STRTree", "six_rknn", "tpl_rknn", "infzone_rknn", "slice_rknn"]

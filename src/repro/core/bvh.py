@@ -1,0 +1,208 @@
+"""Paper-faithful BVH path: LBVH build + any-hit traversal with early exit.
+
+This is the *reference execution model* of Algorithm 1/2 — exactly what the
+OptiX implementation does, minus the fixed-function hardware:
+
+* an LBVH is built over the occluder triangles (Morton-ordered median
+  splits; one primitive per leaf, as in paper Fig. 5),
+* every user is a vertical ray; since the ray direction is ``(0,0,-1)`` the
+  ray–AABB slab test degenerates to 2-D point-in-rectangle and the
+  ray–triangle test to 2-D point-in-triangle (DESIGN.md §2),
+* traversal keeps an explicit stack and terminates the ray as soon as the
+  hit count reaches ``k`` (``optixTerminateRay`` in Alg. 2 line 16).
+
+On a TPU this shape of computation (per-lane data-dependent control flow,
+incoherent gathers) is exactly what the hardware punishes: under ``vmap`` the
+``while_loop`` runs to the *longest* lane in a batch and every node fetch is
+a gather.  We keep it as the faithful baseline that the dense/grid Pallas
+kernels are measured against (EXPERIMENTS.md §Perf-RkNN).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["BVH", "build_bvh", "bvh_hit_counts", "MAX_STACK"]
+
+MAX_STACK = 64  # ample for median-split trees (depth == ceil(log2 M))
+
+
+@dataclasses.dataclass
+class BVH:
+    """Array-encoded binary BVH.
+
+    ``left``/``right``: child node ids; for leaves ``left = -(tri_idx + 1)``
+    and ``right = -1``.  ``bbox``: ``[n_nodes, 4]`` as (xmin, ymin, xmax,
+    ymax).  ``n_tris`` real triangles; root is node 0.
+    """
+
+    left: np.ndarray
+    right: np.ndarray
+    bbox: np.ndarray
+    n_tris: int
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.left)
+
+    def depth(self) -> int:
+        """Max depth (host-side sanity; traversal stack must exceed it)."""
+        d = {0: 1}
+        best = 1
+        stack = [0]
+        while stack:
+            n = stack.pop()
+            for ch in (self.left[n], self.right[n]):
+                if ch >= 0:
+                    d[ch] = d[n] + 1
+                    best = max(best, d[ch])
+                    stack.append(int(ch))
+        return best
+
+
+def _morton2d(xs: np.ndarray, ys: np.ndarray, bits: int = 16) -> np.ndarray:
+    """Interleave quantized x/y into 2*bits Morton codes."""
+
+    def _part(v: np.ndarray) -> np.ndarray:
+        v = v.astype(np.uint64)
+        v = (v | (v << 16)) & np.uint64(0x0000FFFF0000FFFF)
+        v = (v | (v << 8)) & np.uint64(0x00FF00FF00FF00FF)
+        v = (v | (v << 4)) & np.uint64(0x0F0F0F0F0F0F0F0F)
+        v = (v | (v << 2)) & np.uint64(0x3333333333333333)
+        v = (v | (v << 1)) & np.uint64(0x5555555555555555)
+        return v
+
+    q = (1 << bits) - 1
+    xi = np.clip((xs * q).astype(np.int64), 0, q)
+    yi = np.clip((ys * q).astype(np.int64), 0, q)
+    return _part(xi) | (_part(yi) << np.uint64(1))
+
+
+def build_bvh(tris: np.ndarray) -> BVH:
+    """LBVH over ``[M, 3, 2]`` triangles (host, numpy).
+
+    Morton-sorts centroids then median-splits the sorted range — the
+    standard linear-BVH construction (paper refs [53–55]) which yields
+    spatially coherent subtrees without a full SAH sweep.
+    """
+    tris = np.asarray(tris, dtype=np.float64)
+    M = len(tris)
+    if M == 0:
+        return BVH(
+            left=np.array([-1], np.int32),
+            right=np.array([-1], np.int32),
+            bbox=np.zeros((1, 4), np.float32),
+            n_tris=0,
+        )
+    lo = tris.min(axis=1)  # [M, 2]
+    hi = tris.max(axis=1)
+    cent = (lo + hi) / 2.0
+    cmin = cent.min(axis=0)
+    cspan = np.maximum(cent.max(axis=0) - cmin, 1e-12)
+    norm = (cent - cmin) / cspan
+    order = np.argsort(_morton2d(norm[:, 0], norm[:, 1]), kind="stable")
+
+    n_nodes = 2 * M - 1
+    left = np.full(n_nodes, -1, np.int32)
+    right = np.full(n_nodes, -1, np.int32)
+    bbox = np.zeros((n_nodes, 4), np.float64)
+
+    next_id = [0]
+
+    def alloc() -> int:
+        i = next_id[0]
+        next_id[0] += 1
+        return i
+
+    # iterative build: stack of (node_id, lo, hi) ranges over `order`
+    root = alloc()
+    stack: list[tuple[int, int, int]] = [(root, 0, M)]
+    while stack:
+        node, s, e = stack.pop()
+        idx = order[s:e]
+        bbox[node, :2] = lo[idx].min(axis=0)
+        bbox[node, 2:] = hi[idx].max(axis=0)
+        if e - s == 1:
+            left[node] = -(int(idx[0]) + 1)
+            right[node] = -1
+            continue
+        mid = (s + e) // 2
+        l_id, r_id = alloc(), alloc()
+        left[node] = l_id
+        right[node] = r_id
+        stack.append((l_id, s, mid))
+        stack.append((r_id, mid, e))
+
+    return BVH(left=left, right=right, bbox=bbox.astype(np.float32), n_tris=M)
+
+
+def bvh_hit_counts(
+    xs,
+    ys,
+    left,
+    right,
+    bbox,
+    coeffs,
+    k: int | None = None,
+    max_stack: int = MAX_STACK,
+):
+    """Per-user occluder hit counts via stack traversal (jit/vmap-able).
+
+    ``xs, ys``: ``[N]`` user coordinates. ``coeffs``: ``[M, 3, 3]`` edge
+    functions.  ``k``: early-termination threshold (``None`` counts all
+    hits).  Returns ``[N]`` int32 counts saturated at ``k`` when early
+    termination is active — exactly the information Alg. 2 extracts.
+    """
+    left = jnp.asarray(left)
+    right = jnp.asarray(right)
+    bbox = jnp.asarray(bbox)
+    coeffs = jnp.asarray(coeffs)
+    k_cap = int(k) if k is not None else int(coeffs.shape[0]) + 1
+
+    def one(x, y):
+        stack0 = jnp.zeros((max_stack,), jnp.int32)
+
+        def cond(state):
+            _, sp, cnt = state
+            return (sp > 0) & (cnt < k_cap)
+
+        def body(state):
+            stack, sp, cnt = state
+            node = stack[sp - 1]
+            sp = sp - 1
+            l = left[node]
+            r = right[node]
+            is_leaf = l < 0
+            # --- leaf: point-in-triangle (any-hit program) ---------------
+            tri = jnp.maximum(-l - 1, 0)
+            e = coeffs[tri]  # [3, 3]
+            ev = e[:, 0] * x + e[:, 1] * y + e[:, 2]
+            inside = jnp.all(ev >= 0.0)
+            cnt = cnt + jnp.where(is_leaf & inside, 1, 0).astype(jnp.int32)
+            # --- internal: ray-AABB (vertical ray => 2-D point-in-box) --
+            li = jnp.maximum(l, 0)
+            ri = jnp.maximum(r, 0)
+
+            def in_box(b):
+                return (x >= b[0]) & (y >= b[1]) & (x <= b[2]) & (y <= b[3])
+
+            push_l = (~is_leaf) & in_box(bbox[li])
+            push_r = (~is_leaf) & (r >= 0) & in_box(bbox[ri])
+            stack = stack.at[sp].set(li)
+            sp = sp + push_l.astype(jnp.int32)
+            stack = stack.at[sp].set(ri)
+            sp = sp + push_r.astype(jnp.int32)
+            return stack, sp, cnt
+
+        has_tris = coeffs.shape[0] > 0
+        init_sp = jnp.int32(1 if has_tris else 0)
+        _, _, cnt = lax.while_loop(cond, body, (stack0, init_sp, jnp.int32(0)))
+        return cnt
+
+    return jax.vmap(one)(jnp.asarray(xs), jnp.asarray(ys))

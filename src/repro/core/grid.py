@@ -1,0 +1,181 @@
+"""Uniform-grid occluder index — the TPU-native analogue of the BVH.
+
+A BVH walk is pointer-chasing with per-ray divergence; a TPU wants static
+shapes and predictable gathers.  This index replaces the hierarchy with a
+flat ``G x G`` raster of the domain and splits every occluder's coverage of
+each cell into two classes:
+
+* **full coverage** — the triangle contains the entire (closed) cell.  These
+  never need a per-user test: a per-cell ``base`` counter absorbs them.
+  This is the grid-granular generalisation of the paper's early-ray
+  termination: a cell with ``base >= k`` is *saturated* — every user in it
+  is pruned with zero intersection tests.
+* **partial coverage** — the triangle's boundary crosses the cell (exact
+  SAT overlap minus full containment).  Only these go into the per-cell
+  candidate list, which is padded to the max list length so a single gather
+  + edge-function evaluation answers every user in the cell.
+
+Exactness: for any user ``u`` in cell ``c``,
+``hits(u) == base[c] + #{t in list[c] : u inside t}`` — fully-covering
+triangles contain ``u`` by convexity, listed triangles are tested exactly,
+and non-overlapping triangles cannot contain ``u``.  Property-tested against
+the dense count in ``tests/test_core_rknn.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.geometry import Rect
+
+__all__ = ["OccluderGrid", "build_grid", "grid_hit_counts_jnp"]
+
+
+@dataclasses.dataclass
+class OccluderGrid:
+    """Packed grid index (host arrays; move to device as needed).
+
+    ``base``:  ``[G*G]`` int32 fully-covering triangle counts.
+    ``lists``: ``[G*G, L]`` int32 partial-overlap triangle ids, -1 padded.
+    ``coeffs``: ``[M, 3, 3]`` float32 edge functions of all triangles.
+    """
+
+    base: np.ndarray
+    lists: np.ndarray
+    coeffs: np.ndarray
+    G: int
+    rect: Rect
+
+    @property
+    def max_list(self) -> int:
+        return self.lists.shape[1]
+
+    def occupancy(self) -> float:
+        """Mean real entries per cell list (diagnostics / bench_breakdown)."""
+        return float((self.lists >= 0).sum() / max(len(self.lists), 1))
+
+
+def _tri_cell_classify(
+    tri: np.ndarray, coeff: np.ndarray, rect: Rect, G: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """(full_cells, partial_cells) flat cell ids for one triangle.
+
+    Vectorized SAT over the cells of the triangle's clamped AABB:
+    separating axes = 2 box axes + 3 edge normals (closed-set test).
+    Full containment = all 4 cell corners pass all 3 inclusive edge tests.
+    """
+    w = rect.width / G
+    h = rect.height / G
+    # cells are EXPANDED by a float-rounding guard when classifying: a user
+    # whose f32 cell assignment lands one ulp across a boundary must still
+    # see correct counts, so "fully covers the cell" is certified on the
+    # slightly larger box (near-boundary triangles demote to the partial
+    # list, where they are tested exactly).
+    eps = 1e-5 * max(w, h)
+    lo = tri.min(axis=0)
+    hi = tri.max(axis=0)
+    ix0 = int(np.clip(np.floor((lo[0] - eps - rect.xmin) / w), 0, G - 1))
+    ix1 = int(np.clip(np.floor((hi[0] + eps - rect.xmin) / w - 1e-12), 0, G - 1))
+    iy0 = int(np.clip(np.floor((lo[1] - eps - rect.ymin) / h), 0, G - 1))
+    iy1 = int(np.clip(np.floor((hi[1] + eps - rect.ymin) / h - 1e-12), 0, G - 1))
+    if hi[0] < rect.xmin or lo[0] > rect.xmax or hi[1] < rect.ymin or lo[1] > rect.ymax:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+
+    gx = np.arange(ix0, ix1 + 1)
+    gy = np.arange(iy0, iy1 + 1)
+    cx0 = rect.xmin + gx * w - eps  # expanded cell x-lo  [nx]
+    cy0 = rect.ymin + gy * h - eps  # expanded cell y-lo  [ny]
+    CX0, CY0 = np.meshgrid(cx0, cy0, indexing="ij")  # [nx, ny]
+    CX1, CY1 = CX0 + w + 2 * eps, CY0 + h + 2 * eps
+
+    # --- full containment: 4 corners x 3 edges inclusive -----------------
+    corners_x = np.stack([CX0, CX1, CX1, CX0], axis=-1)  # [nx, ny, 4]
+    corners_y = np.stack([CY0, CY0, CY1, CY1], axis=-1)
+    e = (
+        coeff[None, None, None, :, 0] * corners_x[..., None]
+        + coeff[None, None, None, :, 1] * corners_y[..., None]
+        + coeff[None, None, None, :, 2]
+    )  # [nx, ny, 4, 3]
+    corner_inside = np.all(e >= 0.0, axis=-1)  # [nx, ny, 4]
+    full = np.all(corner_inside, axis=-1)  # [nx, ny]
+    any_corner = np.any(corner_inside, axis=-1)
+
+    # --- SAT overlap ------------------------------------------------------
+    # box axes: triangle AABB vs cell (already restricted to AABB range,
+    # but cells at the fringe may still miss on the exact AABB):
+    overlap = (
+        (CX1 >= lo[0]) & (CX0 <= hi[0]) & (CY1 >= lo[1]) & (CY0 <= hi[1])
+    )
+    # triangle edge normals: cell overlaps iff its max corner projection
+    # onto each inward edge normal is >= 0 (some corner not strictly outside)
+    e_max = np.max(e, axis=2)  # [nx, ny, 3] best corner per edge
+    overlap &= np.all(e_max >= 0.0, axis=-1)
+    # cells whose every corner is inside but SAT failed cannot happen;
+    # partial = overlap and not full
+    partial = overlap & ~full
+    # cheap tightening: a cell with no corner inside and no triangle vertex
+    # inside the cell can still overlap via an edge crossing — SAT already
+    # decided that exactly, so nothing more to do.
+    del any_corner
+
+    flat = (gx[:, None] * G + gy[None, :]).astype(np.int64)
+    return flat[full], flat[partial]
+
+
+def build_grid(
+    tris: np.ndarray,
+    coeffs: np.ndarray,
+    rect: Rect,
+    G: int = 64,
+    pad_list_to: int | None = None,
+) -> OccluderGrid:
+    """Build the grid index over real (unpadded) triangles."""
+    tris = np.asarray(tris, dtype=np.float64)
+    coeffs64 = np.asarray(coeffs, dtype=np.float64)
+    M = len(tris)
+    base = np.zeros(G * G, np.int32)
+    cell_lists: list[list[int]] = [[] for _ in range(G * G)]
+    for t in range(M):
+        full, partial = _tri_cell_classify(tris[t], coeffs64[t], rect, G)
+        base[full] += 1
+        for c in partial:
+            cell_lists[int(c)].append(t)
+    L = max((len(l) for l in cell_lists), default=0)
+    L = max(L, 1)
+    if pad_list_to is not None:
+        L = max(L, pad_list_to)
+    lists = np.full((G * G, L), -1, np.int32)
+    for c, l in enumerate(cell_lists):
+        if l:
+            lists[c, : len(l)] = l
+    return OccluderGrid(
+        base=base,
+        lists=lists,
+        coeffs=np.asarray(coeffs, dtype=np.float32),
+        G=G,
+        rect=rect,
+    )
+
+
+def grid_hit_counts_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
+    """Vectorized grid query (pure jnp; Pallas variant in kernels/).
+
+    ``hits[u] = base[cell(u)] + sum_t in list[cell(u)] inside(u, t)``.
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    w = rect.width / G
+    h = rect.height / G
+    cx = jnp.clip(jnp.floor((xs - rect.xmin) / w), 0, G - 1).astype(jnp.int32)
+    cy = jnp.clip(jnp.floor((ys - rect.ymin) / h), 0, G - 1).astype(jnp.int32)
+    cell = cx * G + cy
+    cand = jnp.asarray(lists)[cell]  # [N, L]
+    safe = jnp.maximum(cand, 0)
+    e = jnp.asarray(coeffs)[safe]  # [N, L, 3, 3]
+    ev = e[..., 0] * xs[:, None, None] + e[..., 1] * ys[:, None, None] + e[..., 2]
+    inside = jnp.all(ev >= 0.0, axis=-1) & (cand >= 0)
+    return jnp.asarray(base)[cell] + inside.sum(axis=-1).astype(jnp.int32)

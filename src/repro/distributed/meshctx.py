@@ -1,0 +1,73 @@
+"""Process-global mesh context for sharding constraints inside model code.
+
+Model code calls ``constrain(x, ("data", None, "model"))`` with *logical*
+axis tuples; when a mesh is active the constraint becomes a
+``with_sharding_constraint`` with the corresponding ``NamedSharding`` and
+the special logical name ``"data"`` expands to the full data-parallel axis
+group (``("pod", "data")`` on multi-pod meshes).  With no active mesh
+(smoke tests, single-device) it is a no-op, so models stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh", "get_mesh", "active_mesh", "constrain", "dp_axes", "logical_to_spec"]
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def active_mesh(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All data-parallel mesh axes (includes 'pod' when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def logical_to_spec(mesh: Mesh, logical: tuple) -> P:
+    """Map logical axis names to a PartitionSpec on the active mesh."""
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        elif ax == "data":
+            axes = dp_axes(mesh)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        elif ax == "batch_all":  # every mesh axis as one DP group (dp_only)
+            axes = dp_axes(mesh) + tuple(a for a in ("model",) if a in mesh.axis_names)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        elif ax in mesh.axis_names:
+            out.append(ax)
+        else:  # axis not on this mesh -> replicate
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x, logical: tuple):
+    """Apply a sharding constraint if a mesh is active (else identity)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(mesh, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

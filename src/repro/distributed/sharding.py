@@ -1,0 +1,200 @@
+"""Parameter/activation sharding rules (FSDP x TP on the production mesh).
+
+The scheme (DESIGN.md §9):
+
+* ``'model'`` (TP, 16-way): attention head projections, FFN hidden, vocab,
+  MoE expert axis (expert parallelism), RG-LRU width.
+* ``'data'`` (FSDP, 16-way per pod; joined with ``'pod'`` across pods):
+  the *other* big matrix dimension of every weight — parameters, gradients
+  and Adam moments are all fully sharded (ZeRO-3); XLA inserts the
+  per-layer all-gathers inside the layer scan.
+* Dims that don't divide by the mesh axis fall back to replication —
+  decided per-leaf against the actual mesh (``maybe``-rules), so e.g.
+  mamba2's 50280 vocab simply stays unsharded over 'model' instead of
+  forcing uneven partitions.
+
+KV caches shard batch over data and heads over model when divisible, else
+head_dim over model (contraction-dim sharding costs one small all-reduce in
+the attention einsum; head sharding costs nothing — preference encoded in
+``kv_cache_spec``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.meshctx import dp_axes, logical_to_spec
+
+__all__ = [
+    "axis_size",
+    "param_logical_spec",
+    "params_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+    "tree_shardings",
+]
+
+
+def axis_size(mesh: Mesh, logical: Any) -> int:
+    if logical is None:
+        return 1
+    if logical == "data":
+        return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    if logical == "batch_all":
+        n = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+        return n * (int(mesh.shape["model"]) if "model" in mesh.axis_names else 1)
+    return int(mesh.shape[logical]) if logical in mesh.axis_names else 1
+
+
+def _fit(mesh: Mesh, shape: tuple[int, ...], logical: tuple) -> tuple:
+    """Drop logical axes that don't divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, logical):
+        out.append(ax if ax is not None and dim % axis_size(mesh, ax) == 0 else None)
+    return tuple(out)
+
+
+def param_logical_spec(
+    path: tuple[str, ...], shape: tuple[int, ...], style: str = "baseline"
+) -> tuple:
+    """Logical sharding for a parameter leaf, by path name + rank.
+
+    Stacked per-layer leaves (inside ``groups``) carry a leading repeat dim
+    that is never sharded.
+
+    ``style="fsdp_out"`` (§Perf hillclimb iteration 2): the baseline rules
+    put the FSDP ('data') shard on the dim the FORWARD matmul contracts —
+    GSPMD then resolves the contraction by partial-summing over 'data' and
+    all-reducing *activations* (measured: 60 all-reduces of [B,S,d] f32 per
+    train step).  Moving the FSDP shard to the *output* dim (combined with
+    'model' -> 'batch_all') makes the cheap resolution — per-layer weight
+    all-gather — the only option, which is textbook FSDP.
+    """
+    name = path[-1]
+    stacked = "groups" in path
+    lead: tuple = (None,) if stacked else ()
+    base_rank = len(shape) - len(lead)
+    fsdp_out = style == "fsdp_out"
+
+    def spec(*axes):
+        return lead + tuple(axes)
+
+    if name == "embed":
+        return ("model", "data")
+    if name == "unembed":
+        return (None, "batch_all") if fsdp_out else ("data", "model")
+    if name in ("scale", "bias", "norm_scale", "conv_b", "A_log", "D", "dt_bias", "lambda"):
+        return lead + (None,) * base_rank
+    if name in ("wq", "wk", "wv", "w_in", "w_gate", "w_gate_in", "w_x_in", "in_proj"):
+        if base_rank == 3:  # MoE expert stack [E, d, f]
+            return spec("model", None, "data") if fsdp_out else spec("model", "data", None)
+        return spec(None, "batch_all") if fsdp_out else spec("data", "model")
+    if name in ("wo", "w_out", "out_proj"):
+        if base_rank == 3:  # MoE expert stack [E, f, d]
+            return spec("model", None, "data")
+        return spec("model", "data")
+    if name in ("bq", "bk", "bv"):
+        return spec("model")
+    if name == "router":
+        return spec(None, None) if fsdp_out else spec("data", None)
+    if name == "conv_w":
+        return spec(None, "model")
+    if name in ("w_a", "w_i"):  # RG-LRU block-diagonal gates [nb, bs, bs]
+        return spec("model", None, None)
+    # default: shard the two largest dims data x model when 2-D
+    if base_rank == 2:
+        return spec(None, "batch_all") if fsdp_out else spec("data", "model")
+    return lead + (None,) * base_rank
+
+
+def params_shardings(mesh: Mesh, params_shapes, style: str = "baseline") -> Any:
+    """NamedSharding pytree congruent with an eval_shape of the params."""
+
+    def one(path, leaf):
+        keys = tuple(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in path
+        )
+        logical = param_logical_spec(keys, leaf.shape, style=style)
+        logical = _fit(mesh, leaf.shape, logical)
+        return NamedSharding(mesh, logical_to_spec(mesh, logical))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def tree_shardings(mesh: Mesh, shapes, logical_fn) -> Any:
+    def one(path, leaf):
+        logical = logical_fn(path, leaf.shape)
+        logical = _fit(mesh, leaf.shape, logical)
+        return NamedSharding(mesh, logical_to_spec(mesh, logical))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes) -> Any:
+    """tokens/labels [B, S] -> batch over all DP axes; extras [B, ...]."""
+
+    def logical(path, shape):
+        return ("data",) + (None,) * (len(shape) - 1)
+
+    return tree_shardings(mesh, batch_shapes, logical)
+
+
+def _kv_cache_logical(shape: tuple[int, ...], mesh: Mesh, style: str = "baseline") -> tuple:
+    """[R, B, S, K, hd]: batch->data; K->model if divisible else hd->model.
+
+    ``style="seq_kv"`` (§Perf decode iteration): shard the SEQUENCE dim over
+    'model' instead.  With heads that don't divide the TP axis the baseline
+    head-dim sharding forces full-cache all-gathers every layer (the
+    attention einsum contracts the sharded hd, and the cache-update scatter
+    wants yet another layout — XLA warns "involuntary full
+    rematerialization"); with S sharded, scores/softmax/out are shard-local
+    up to two tiny partial reductions and the position update is a
+    shard-local dynamic slice."""
+    R, B, S, K, hd = shape
+    k_divides = K % axis_size(mesh, "model") == 0
+    if style == "seq_kv" and not k_divides and S % axis_size(mesh, "model") == 0:
+        # head sharding is communication-free when K divides the TP axis
+        # (deepseek/whisper, K=16) — keep it; sequence sharding is the fix
+        # for the non-divisible cases only.
+        return (None, "data", "model", None, None)
+    head_ax = "model" if K % axis_size(mesh, "model") == 0 else None
+    hd_ax = None
+    if head_ax is None and hd % axis_size(mesh, "model") == 0:
+        hd_ax = "model"
+    return (None, "data", None, head_ax, hd_ax)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes, style: str = "baseline") -> Any:
+    """Serving-cache sharding: KV time-major tensors + recurrent states."""
+
+    def logical(path, shape):
+        name = path[-1] if path else ""
+        key = name.key if hasattr(name, "key") else str(name)
+        if key in ("k", "v", "xk", "xv") and len(shape) == 5:
+            return _kv_cache_logical(shape, mesh, style=style)
+        if key == "state" and len(shape) == 5:  # ssd state [R, B, H, N, P]
+            return (None, "data", "model", None, None)
+        if key == "state" and len(shape) == 3:  # rglru [R, B, w]
+            return (None, "data", "model")
+        if key == "conv" and len(shape) == 4:  # [R, B, W, C]
+            return (None, "data", None, "model")
+        if key == "pos":
+            return ("data",)
+        return (None, "data") + (None,) * (len(shape) - 2)
+
+    def one(path, leaf):
+        keys = tuple(path)
+        lg = logical(keys, leaf.shape)
+        lg = _fit(mesh, leaf.shape, lg)
+        return NamedSharding(mesh, logical_to_spec(mesh, lg))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

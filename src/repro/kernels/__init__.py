@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
+
+* ``raycast``      — dense occluder hit counting (the ray-casting stage)
+* ``rank_count``   — distance-rank counting (brute / "InfZone-GPU" baseline)
+* ``grid_raycast`` — grid-culled counting (the TPU BVH analogue)
+* ``ops``          — jit'd public wrappers (padding, backend selection)
+* ``ref``          — pure-jnp oracles used by the allclose sweeps
+"""
+
+from repro.kernels.ops import rank_count, raycast_count
+
+__all__ = ["raycast_count", "rank_count"]

@@ -1,0 +1,155 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, layout packing (``[M,3,3]`` coeffs →
+``A/B/C`` planes), backend selection and unpadding.  On this CPU container
+the kernels execute in interpret mode (bit-faithful to the TPU lowering's
+semantics); on a real TPU set ``REPRO_PALLAS_INTERPRET=0`` (or rely on the
+auto-detection) to run the compiled Mosaic kernels.  ``backend="ref"``
+routes to the pure-jnp oracle — the fast path on CPU and the baseline the
+kernels are benchmarked against.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.raycast import raycast_count_kernel_call
+from repro.kernels.rank_count import rank_count_kernel_call
+
+__all__ = ["raycast_count", "rank_count", "pallas_interpret_default"]
+
+_USER_CHUNK = 32_768  # bounds the [chunk, M, 3] broadcast temp (~40 MB f32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _raycast_ref_chunked(xs, ys, coeffs, chunk: int = _USER_CHUNK):
+    """Jitted + user-chunked oracle path (the fast CPU execution)."""
+    n = xs.shape[0]
+    pad = (-n) % chunk
+    xs_p = jnp.pad(xs, (0, pad))
+    ys_p = jnp.pad(ys, (0, pad))
+    xc = xs_p.reshape(-1, chunk)
+    yc = ys_p.reshape(-1, chunk)
+    out = jax.lax.map(lambda xy: _ref.raycast_count_ref(xy[0], xy[1], coeffs), (xc, yc))
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def _rank_ref_jit(xs, ys, fx, fy, thr):
+    return _ref.rank_count_ref(xs, ys, fx, fy, thr)
+
+
+def pallas_interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad1(x: jnp.ndarray, mult: int, value: float) -> jnp.ndarray:
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((p,), value, x.dtype)])
+
+
+def raycast_count(
+    xs,
+    ys,
+    coeffs,
+    *,
+    backend: str = "pallas",
+    bu: int = 1024,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """Hit counts of users against occluder edge functions.
+
+    ``xs, ys``: ``[N]``; ``coeffs``: ``[M, 3, 3]``.  Returns ``[N]`` int32.
+    Padding slots are degenerate (``a=b=0, c=-1``) and contribute nothing.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    if backend == "ref":
+        if xs.shape[0] > _USER_CHUNK:
+            return _raycast_ref_chunked(xs, ys, coeffs)
+        return _ref.raycast_count_ref(xs, ys, coeffs)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    n = xs.shape[0]
+    m = coeffs.shape[0]
+    bu_eff = min(bu, max(8, 1 << max(int(np.ceil(np.log2(max(n, 1)))), 3)))
+    bm_eff = min(bm, max(128, 1 << max(int(np.ceil(np.log2(max(m, 1)))), 7)))
+    xs_p = _pad1(xs, bu_eff, 0.0)
+    ys_p = _pad1(ys, bu_eff, 0.0)
+    # coeffs -> [3, M] planes, padded with never-inside rows (c = -1)
+    A = coeffs[:, :, 0].T
+    B = coeffs[:, :, 1].T
+    C = coeffs[:, :, 2].T
+    pm = (-m) % bm_eff
+    if pm:
+        A = jnp.concatenate([A, jnp.zeros((3, pm), A.dtype)], axis=1)
+        B = jnp.concatenate([B, jnp.zeros((3, pm), B.dtype)], axis=1)
+        C = jnp.concatenate([C, jnp.full((3, pm), -1.0, C.dtype)], axis=1)
+    out = raycast_count_kernel_call(
+        xs_p, ys_p, A, B, C, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
+    )
+    return out[:n]
+
+
+def rank_count(
+    users,
+    facilities,
+    q,
+    *,
+    exclude: int | None = None,
+    backend: str = "pallas",
+    bu: int = 1024,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """#facilities strictly closer than ``q`` per user (``[N]`` int32).
+
+    ``users``: ``[N, 2]``; ``facilities``: ``[M, 2]``; ``q``: ``[2]``.
+    ``exclude`` masks one facility row (the query itself for in-set
+    queries) by pushing it to infinity.
+    """
+    users = jnp.asarray(users, jnp.float32)
+    facilities = jnp.asarray(facilities, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    xs, ys = users[:, 0], users[:, 1]
+    fx, fy = facilities[:, 0], facilities[:, 1]
+    if exclude is not None:
+        fx = fx.at[exclude].set(jnp.inf)
+        fy = fy.at[exclude].set(jnp.inf)
+    thr = (xs - q[0]) ** 2 + (ys - q[1]) ** 2
+    if backend == "ref":
+        return _rank_ref_jit(xs, ys, fx, fy, thr)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    n = xs.shape[0]
+    m = fx.shape[0]
+    bu_eff = min(bu, max(8, 1 << max(int(np.ceil(np.log2(max(n, 1)))), 3)))
+    bm_eff = min(bm, max(128, 1 << max(int(np.ceil(np.log2(max(m, 1)))), 7)))
+    xs_p = _pad1(xs, bu_eff, 0.0)
+    ys_p = _pad1(ys, bu_eff, 0.0)
+    thr_p = _pad1(thr, bu_eff, 0.0)
+    fx_p = _pad1(fx, bm_eff, jnp.inf)
+    fy_p = _pad1(fy, bm_eff, jnp.inf)
+    out = rank_count_kernel_call(
+        xs_p, ys_p, fx_p, fy_p, thr_p, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
+    )
+    return out[:n]

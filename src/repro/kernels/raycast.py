@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: dense occluder hit counting (the paper's hot spot).
+
+This is the ray-casting stage of Algorithm 1 adapted to the TPU (DESIGN.md
+§2): the vertical-ray / layered-triangle intersection collapses to a 2-D
+edge-function test, so the kernel is a tiled ``[users x occluders]``
+containment-count:
+
+* users are tiled along the grid's first axis — each program instance holds
+  a ``(BU,)`` block of x/y in VMEM,
+* all three edge-coefficient planes (``A, B, C`` of shape ``[3, M]``) are
+  tiled along the second grid axis in lane-aligned ``(3, BM)`` blocks,
+* the body broadcasts to a ``[BU, BM]`` mask (6 FMA + 3 compares + 2 ANDs
+  per pair on the VPU) and accumulates row sums into the int32 output
+  block, which is revisited across the ``M`` grid axis (accumulator
+  pattern; zeroed at ``j == 0``).
+
+Early ray termination (Alg. 2 line 16) has no SIMD analogue; after
+InfZone-style pruning the scene is so small (``m`` ≈ 40–70) that the sweep
+is *user-read bound*, not test bound — see EXPERIMENTS.md §Perf-RkNN for
+the measured arithmetic-intensity argument.
+
+VMEM budget at the default tiles (BU=1024, BM=512): x/y blocks 8 KiB,
+coefficient blocks 3·2·6 KiB, the ``[BU, BM]`` f32 broadcast temps
+~2 MiB×3 live — comfortably under the ~16 MiB/core budget with double
+buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["raycast_count_kernel_call", "DEFAULT_BU", "DEFAULT_BM"]
+
+DEFAULT_BU = 1024  # users per block (8·128 sublane-aligned once reshaped)
+DEFAULT_BM = 512  # occluders per block (4 lanes of 128)
+
+
+def _raycast_kernel(x_ref, y_ref, a_ref, b_ref, c_ref, o_ref):
+    """One (user-block, occluder-block) tile of the containment count."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...][:, None]  # [BU, 1]
+    y = y_ref[...][:, None]
+    a = a_ref[...]  # [3, BM]
+    b = b_ref[...]
+    c = c_ref[...]
+    inside = (x * a[0][None, :] + y * b[0][None, :] + c[0][None, :]) >= 0.0
+    inside &= (x * a[1][None, :] + y * b[1][None, :] + c[1][None, :]) >= 0.0
+    inside &= (x * a[2][None, :] + y * b[2][None, :] + c[2][None, :]) >= 0.0
+    o_ref[...] += jnp.sum(inside, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bm", "interpret"))
+def raycast_count_kernel_call(
+    xs, ys, A, B, C, *, bu: int = DEFAULT_BU, bm: int = DEFAULT_BM, interpret: bool = True
+):
+    """Invoke the kernel on pre-padded inputs.
+
+    ``xs, ys``: ``[Np]`` (``Np % bu == 0``); ``A, B, C``: ``[3, Mp]``
+    (``Mp % bm == 0``) edge coefficients; padding slots must be degenerate
+    (all-zero with ``c = -1``) so they contribute no hits.  Returns ``[Np]``
+    int32 counts.  Padding/unpadding lives in :mod:`repro.kernels.ops`.
+    """
+    n_p = xs.shape[0]
+    m_p = A.shape[1]
+    grid = (n_p // bu, m_p // bm)
+    return pl.pallas_call(
+        _raycast_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bu,), lambda i, j: (i,)),
+            pl.BlockSpec((bu,), lambda i, j: (i,)),
+            pl.BlockSpec((3, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((3, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((3, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bu,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xs, ys, A, B, C)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: small, obviously-right, and used by
+the shape/dtype sweep tests (``tests/test_kernels.py``) to validate the
+kernels in interpret mode, and by the benchmarks as the non-kernel JAX
+baseline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["raycast_count_ref", "rank_count_ref", "grid_raycast_ref"]
+
+
+def raycast_count_ref(xs, ys, coeffs):
+    """Dense occluder hit counting.
+
+    ``xs, ys``: ``[N]`` user coordinates; ``coeffs``: ``[M, 3, 3]`` triangle
+    edge functions (rows ``(a, b, c)``; inside ⇔ all three
+    ``a x + b y + c >= 0``).  Returns ``[N]`` int32 hit counts.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    e = (
+        coeffs[None, :, :, 0] * xs[:, None, None]
+        + coeffs[None, :, :, 1] * ys[:, None, None]
+        + coeffs[None, :, :, 2]
+    )  # [N, M, 3]
+    inside = jnp.all(e >= 0.0, axis=-1)
+    return inside.sum(axis=-1).astype(jnp.int32)
+
+
+def rank_count_ref(xs, ys, fx, fy, thr):
+    """Distance-rank counting (the "InfZone-GPU" / brute verification op).
+
+    Counts facilities with ``(x - fx)^2 + (y - fy)^2 < thr`` per user, where
+    ``thr[u]`` is the user's squared distance to the query facility.
+    Returns ``[N]`` int32.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    fx = jnp.asarray(fx, jnp.float32)
+    fy = jnp.asarray(fy, jnp.float32)
+    thr = jnp.asarray(thr, jnp.float32)
+    d2 = (xs[:, None] - fx[None, :]) ** 2 + (ys[:, None] - fy[None, :]) ** 2
+    return (d2 < thr[:, None]).sum(axis=-1).astype(jnp.int32)
+
+
+def grid_raycast_ref(xs, ys, base, lists, coeffs, rect_lo, rect_size, G: int):
+    """Grid-culled hit counting (mirror of core.grid.grid_hit_counts_jnp,
+    parameterised the way the Pallas kernel consumes the rect)."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    w = rect_size[0] / G
+    h = rect_size[1] / G
+    cx = jnp.clip(jnp.floor((xs - rect_lo[0]) / w), 0, G - 1).astype(jnp.int32)
+    cy = jnp.clip(jnp.floor((ys - rect_lo[1]) / h), 0, G - 1).astype(jnp.int32)
+    cell = cx * G + cy
+    cand = jnp.asarray(lists)[cell]
+    safe = jnp.maximum(cand, 0)
+    e = jnp.asarray(coeffs, jnp.float32)[safe]
+    ev = e[..., 0] * xs[:, None, None] + e[..., 1] * ys[:, None, None] + e[..., 2]
+    inside = jnp.all(ev >= 0.0, axis=-1) & (cand >= 0)
+    return jnp.asarray(base)[cell] + inside.sum(axis=-1).astype(jnp.int32)

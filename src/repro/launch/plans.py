@@ -1,0 +1,77 @@
+"""Per-(arch x shape) execution plans: microbatching, remat, block sizes.
+
+These are the launch-time policy knobs that make every cell fit the 16 GB
+v5e HBM budget at the production mesh — chosen by napkin math (activation
+bytes per microbatch x layers / shards) and verified by the dry-run's
+``memory_analysis`` (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["ExecPlan", "exec_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    n_microbatches: int = 1
+    remat: str = "full"  # none | dots | full
+    q_block: int = 512
+    kv_block: int = 1024
+    decode_cache_len: int | None = None  # defaults to shape seq_len
+    # beyond-paper optimization switches (opt level 1; see configs/base.py)
+    flash_vjp: bool = False
+    q_parallel: bool = False
+    moe_gather: bool = False
+    layout: str = "tp"
+    fsdp_gather: bool = False
+
+
+def exec_plan(cfg: ArchConfig, shape: str, opt: int = 0) -> ExecPlan:
+    """opt=0: paper-faithful/naive baseline.  opt=1: best-measured §Perf
+    config per arch family (see EXPERIMENTS.md §Perf for the iteration log
+    that selected these — including the refuted variants)."""
+    big = cfg.d_model >= 8192 or cfg.n_layers >= 48
+    o: dict = {}
+    if opt >= 1:
+        # moe_gather removed the bogus dispatch FLOPs (useful 0.11->0.49 on
+        # dbrx with fsdp_out storage) but the collective term worsened more
+        # than compute improved -> net-negative, OFF at opt=1 (see §Perf
+        # iterations 2/3 in EXPERIMENTS.md; code kept for future EP work).
+        # flash_vjp: off for the enc-dec family — its S=4k/1.5k attention
+        # never hit the residual pathology, and the fused bwd's dk/dv scan
+        # carries re-shard per block (T_x 3.3s -> 30s on whisper train,
+        # refuted; §Perf iteration 4).
+        o = dict(flash_vjp=cfg.encdec is None)
+        # tiny models: TP=16 is pure overhead -> run all 256 chips as DP.
+        # Gated by PARAM COUNT: the trade is (TP activation all-reduces
+        # saved) vs (full weight-grad all-reduces incurred) — whisper at
+        # 0.8B params lost 6x to the latter, mamba2 at 0.13B wins 4.4x
+        # (refuted/confirmed pair, EXPERIMENTS §Perf iteration 4).  Also
+        # requires the global batch to fill the mesh (gb=256 at train_4k);
+        # the attn-free SSM keeps it on prefill too (seq shards instead).
+        if cfg.moe is None and cfg.param_count() < 3e8:
+            if shape == "train_4k" or cfg.ssm is not None:
+                o["layout"] = "dp_only"
+        # heads that don't divide the TP axis: shard attention over the
+        # q-block dim instead of heads (vmap'd flash, H3) + explicit weight
+        # gathers (helped qwen2; neutral for llama3; hurt MoE -> per-family)
+        if cfg.n_heads % 16 and shape in ("train_4k", "prefill_32k"):
+            o["q_parallel"] = True
+            o["fsdp_gather"] = True
+    if shape == "train_4k":
+        if cfg.name == "llama3-405b":
+            # 256 x 4k tokens; 1 µbatch of 32 rows => layer input
+            # 32·4096·16384·2B = 4 GiB global, /512 shards + full remat
+            return ExecPlan(n_microbatches=8, remat="full", **o)
+        if big:
+            return ExecPlan(n_microbatches=8, remat="full", **o)
+        return ExecPlan(n_microbatches=4, remat="full", **o)
+    if shape == "prefill_32k":
+        return ExecPlan(n_microbatches=1, remat="full", q_block=1024, kv_block=2048, **o)
+    # decode shapes: no remat (no backward), cache length = seq_len
+    o.pop("q_parallel", None)
+    return ExecPlan(n_microbatches=1, remat="none", **o)

@@ -1,0 +1,123 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+TPU v5e hardware model (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  All parsed HLO costs are per-device (post-SPMD), so:
+
+    compute    T_c = flops_per_device / 197e12          [s]
+    memory     T_m = hbm_bytes_per_device / 819e9       [s]
+    collective T_x = coll_bytes_per_device / 50e9       [s]
+
+MODEL_FLOPS uses the 6·N·D convention for training (2·N·D for inference
+steps), with N = active parameters for MoE; the ratio MODEL/HLO flags
+remat recompute, causal-mask waste and dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.launch.hlo_cost import HloCost
+
+__all__ = ["HW", "RooflineReport", "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s / chip
+    ici_bw: float = 50e9  # B/s / link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    kind: str
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_global: float
+    hlo_flops_global: float
+    collective_by_kind: dict
+    bytes_per_device: float
+    flops_per_device: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline lower bound on step time (terms overlap perfectly)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops_global / self.hlo_flops_global
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the peak-compute roofline the *useful* model flops
+        achieve if the step runs exactly at the dominant-term bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        achieved = self.model_flops_global / self.t_bound  # flop/s across fleet
+        return achieved / (self.chips * HW.peak_flops)
+
+    def row(self) -> dict:
+        return dict(
+            arch=self.arch,
+            shape=self.shape,
+            kind=self.kind,
+            chips=self.chips,
+            t_compute_ms=self.t_compute * 1e3,
+            t_memory_ms=self.t_memory * 1e3,
+            t_collective_ms=self.t_collective * 1e3,
+            dominant=self.dominant,
+            model_flops=self.model_flops_global,
+            hlo_flops=self.hlo_flops_global,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+            collectives={k: v for k, v in self.collective_by_kind.items()},
+        )
+
+
+def model_flops(cfg: ArchConfig, kind: str, tokens: int) -> float:
+    n = cfg.param_count(active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def roofline_terms(
+    arch: str,
+    shape: str,
+    kind: str,
+    cfg: ArchConfig,
+    cost: HloCost,
+    chips: int,
+    tokens: int,
+    hw: HW = HW(),
+) -> RooflineReport:
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        kind=kind,
+        chips=chips,
+        t_compute=cost.flops / hw.peak_flops,
+        t_memory=cost.hbm_bytes / hw.hbm_bw,
+        t_collective=cost.collective_bytes / hw.ici_bw,
+        model_flops_global=model_flops(cfg, kind, tokens),
+        hlo_flops_global=cost.flops * chips,
+        collective_by_kind=dict(cost.collective_by_kind),
+        bytes_per_device=cost.hbm_bytes,
+        flops_per_device=cost.flops,
+    )

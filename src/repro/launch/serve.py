@@ -1,0 +1,201 @@
+"""Distributed RkNN serving — the paper's workload as a production service.
+
+Design (DESIGN.md §4):
+* the user set is uploaded ONCE, sharded over every data-parallel mesh axis
+  (the paper's "no user index, plain GPU transfer" — Table 2 — generalised
+  to a fleet);
+* queries arrive in batches of ``Q``; scene construction (InfZone-style
+  pruning + occluders, host numpy) runs in a worker thread and is
+  double-buffered against the device ray-cast of the previous batch;
+* the device step is a single pjit'd batched hit-count: users sharded
+  ``P(('pod','data'))``, per-query scenes replicated (they are tiny —
+  ~64 triangles · 36 B), queries sharded over ``'model'`` — zero
+  communication until the final result gather;
+* queries are idempotent, so fault tolerance is re-execution: a lost pod's
+  user shard is re-issued on the surviving mesh (runtime/elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.geometry import Rect
+from repro.core.scene import build_scene
+from repro.distributed.meshctx import dp_axes
+
+__all__ = ["RkNNServer", "batched_raycast_counts", "lower_rknn_serve"]
+
+
+def batched_raycast_counts(xs, ys, coeffs):
+    """counts[q, u] for stacked scenes.  xs/ys: [N]; coeffs: [Q, M, 3, 3]."""
+
+    def one(cf):
+        e = (
+            cf[None, :, :, 0] * xs[:, None, None]
+            + cf[None, :, :, 1] * ys[:, None, None]
+            + cf[None, :, :, 2]
+        )
+        inside = jnp.all(e >= 0.0, axis=-1)
+        return inside.sum(axis=-1).astype(jnp.int32)  # [N]
+
+    return jax.vmap(one)(coeffs)  # [Q, N]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    t_scene_s: float = 0.0
+    t_device_s: float = 0.0
+    m_max: int = 0
+
+
+class RkNNServer:
+    """Batched RkNN query server over a (possibly multi-pod) mesh."""
+
+    def __init__(
+        self,
+        facilities: np.ndarray,
+        users: np.ndarray,
+        *,
+        mesh: Mesh | None = None,
+        pad_scene_to: int = 128,
+        strategy: str = "infzone",
+        scene_cache: int = 0,
+    ):
+        self.facilities = np.asarray(facilities, dtype=np.float64)
+        self.users = np.asarray(users, dtype=np.float64)
+        self.rect = Rect.from_points(self.facilities, self.users)
+        self.mesh = mesh
+        self.pad = pad_scene_to
+        self.strategy = strategy
+        self.stats = ServeStats()
+        self._cache = None
+        if scene_cache:  # paper future-work 2: amortize repeated queries
+            from repro.core.hybrid import SceneCache
+
+            self._cache = SceneCache(capacity=scene_cache)
+
+        xs = self.users[:, 0].astype(np.float32)
+        ys = self.users[:, 1].astype(np.float32)
+        if mesh is not None:
+            dp = dp_axes(mesh)
+            user_sh = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+            scene_sh = NamedSharding(mesh, P("model", None, None, None))
+            out_sh = NamedSharding(mesh, P("model", dp if len(dp) > 1 else dp[0]))
+            # pad user count to the DP degree
+            n = len(xs)
+            dpn = int(np.prod([mesh.shape[a] for a in dp]))
+            padn = (-n) % dpn
+            if padn:
+                xs = np.concatenate([xs, np.full(padn, 2e9, np.float32)])
+                ys = np.concatenate([ys, np.full(padn, 2e9, np.float32)])
+            self._n_real = n
+            self.xs = jax.device_put(xs, user_sh)
+            self.ys = jax.device_put(ys, user_sh)
+            self._step = jax.jit(
+                batched_raycast_counts,
+                in_shardings=(user_sh, user_sh, scene_sh),
+                out_shardings=out_sh,
+            )
+        else:
+            self._n_real = len(xs)
+            self.xs = jnp.asarray(xs)
+            self.ys = jnp.asarray(ys)
+            self._step = jax.jit(batched_raycast_counts)
+
+    # -- scene construction (host side, overlappable) ----------------------
+    def _one_scene(self, q: int, k: int):
+        if self._cache is not None:
+            scene, _ = self._cache.get_or_build(
+                self.facilities, int(q), k, self.rect, strategy=self.strategy
+            )
+            return scene
+        return build_scene(self.facilities, int(q), k, self.rect, strategy=self.strategy)
+
+    def _build_batch(self, q_indices, k: int) -> tuple[np.ndarray, list]:
+        scenes = [self._one_scene(int(q), k) for q in q_indices]
+        mmax = max(s.n_tris for s in scenes)
+        if mmax > self.pad:  # grow the static pad (rare; re-jit once)
+            self.pad = 1 << int(np.ceil(np.log2(mmax)))
+        from repro.core.scene import pad_scene_arrays
+
+        coeffs = np.stack(
+            [pad_scene_arrays(s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], self.pad)[1] for s in scenes]
+        )  # [Q, pad, 3, 3]
+        return coeffs.astype(np.float32), scenes
+
+    # -- serving -------------------------------------------------------------
+    def query_batch(self, q_indices, k: int) -> np.ndarray:
+        """Masks [Q, N] for a batch of facility-index queries."""
+        t0 = time.perf_counter()
+        coeffs, scenes = self._build_batch(q_indices, k)
+        t1 = time.perf_counter()
+        counts = np.asarray(self._step(self.xs, self.ys, jnp.asarray(coeffs)))
+        t2 = time.perf_counter()
+        self.stats.n_queries += len(q_indices)
+        self.stats.t_scene_s += t1 - t0
+        self.stats.t_device_s += t2 - t1
+        self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
+        return counts[:, : self._n_real] < k
+
+    def serve_stream(self, batches, k: int):
+        """Double-buffered stream: scene build for batch i+1 overlaps the
+        device ray-cast of batch i (generator of [Q, N] masks)."""
+        q: "queue.Queue" = queue.Queue(maxsize=2)
+
+        def producer():
+            try:
+                for b in batches:
+                    t0 = time.perf_counter()
+                    built = self._build_batch(b, k)
+                    self.stats.t_scene_s += time.perf_counter() - t0
+                    q.put((b, built))
+                q.put(None)
+            except BaseException as e:  # surface in the consumer, no deadlock
+                q.put(e)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            b, (coeffs, scenes) = item
+            t0 = time.perf_counter()
+            counts = np.asarray(self._step(self.xs, self.ys, jnp.asarray(coeffs)))
+            self.stats.t_device_s += time.perf_counter() - t0
+            self.stats.n_queries += len(b)
+            self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
+            yield b, counts[:, : self._n_real] < k
+
+
+def lower_rknn_serve(mesh: Mesh, n_users: int, q_batch: int, m_pad: int = 128):
+    """Dry-run lowering of the serve step on a production mesh (the RkNN
+    analogue of the LM cells; exercised in tests + EXPERIMENTS §Dry-run)."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    user_sh = NamedSharding(mesh, P(dp_spec))
+    scene_sh = NamedSharding(mesh, P("model", None, None, None))
+    out_sh = NamedSharding(mesh, P("model", dp_spec))
+    xs = jax.ShapeDtypeStruct((n_users,), jnp.float32)
+    cf = jax.ShapeDtypeStruct((q_batch, m_pad, 3, 3), jnp.float32)
+    return (
+        jax.jit(
+            batched_raycast_counts,
+            in_shardings=(user_sh, user_sh, scene_sh),
+            out_shardings=out_sh,
+        )
+        .lower(xs, xs, cf)
+        .compile()
+    )

@@ -1,0 +1,119 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation ever happens here — params, optimizer state, batches
+and serving caches are all ``jax.eval_shape`` / ``ShapeDtypeStruct``
+skeletons that the dry-run lowers against (the shannon/kernels pattern the
+brief references).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import SHAPES
+from repro.launch.plans import ExecPlan, exec_plan
+from repro.models.registry import Model, build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["CellSpec", "make_cell", "input_specs"]
+
+
+def input_specs(arch: str, shape: str = "train_4k", opt: int = 0):
+    """ShapeDtypeStruct stand-ins for every input of the (arch x shape)
+    step — the brief's entry point; returns the positional args tuple the
+    jitted step is lowered against (weak-type-correct, shardable, zero
+    device allocation)."""
+    from repro.configs.registry import get_config
+
+    return make_cell(arch, shape, get_config(arch), opt=opt).args_shapes
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything the dry-run needs for one (arch x shape) cell."""
+
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    cfg: ArchConfig
+    model: Model
+    plan: ExecPlan
+    step_fn: Any  # the function to jit
+    args_shapes: tuple  # ShapeDtypeStructs, positional
+    donate: tuple[int, ...]
+    seq_len: int
+    global_batch: int
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extras_sds(model: Model, batch: int) -> dict:
+    return {
+        k: _sds(shp, dt) for k, (shp, dt) in model.extras_shapes(batch).items()
+    }
+
+
+def make_cell(
+    arch: str, shape: str, cfg: ArchConfig, opt_cfg: AdamWConfig | None = None,
+    opt: int = 0,
+) -> CellSpec:
+    from repro.steps.train import make_decode_step, make_prefill_step, make_train_step
+
+    seq, gb, kind = SHAPES[shape]
+    plan = exec_plan(cfg, shape, opt=opt)
+    cfg = dataclasses.replace(
+        cfg,
+        remat=plan.remat,
+        q_block=plan.q_block,
+        kv_block=plan.kv_block,
+        flash_vjp=plan.flash_vjp,
+        q_parallel=plan.q_parallel,
+        moe_gather=plan.moe_gather,
+        layout=plan.layout,
+        fsdp_gather=plan.fsdp_gather,
+    )
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    if kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        state_shapes = {"params": params_shapes, "opt": opt_shapes}
+        batch_shapes = {
+            "tokens": _sds((gb, seq), jnp.int32),
+            "labels": _sds((gb, seq), jnp.int32),
+            **_extras_sds(model, gb),
+        }
+        step = make_train_step(model, opt_cfg, n_microbatches=plan.n_microbatches)
+        return CellSpec(
+            arch, shape, kind, cfg, model, plan, step,
+            (state_shapes, batch_shapes), donate=(0,), seq_len=seq, global_batch=gb,
+        )
+
+    if kind == "prefill":
+        batch_shapes = _sds((gb, seq), jnp.int32)
+        step = make_prefill_step(model, pad_cache_to=seq)
+        return CellSpec(
+            arch, shape, kind, cfg, model, plan, step,
+            (params_shapes, batch_shapes, _extras_sds(model, gb)),
+            donate=(), seq_len=seq, global_batch=gb,
+        )
+
+    # decode: one new token against a cache of seq_len
+    cache_len = plan.decode_cache_len or seq
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(gb, cache_len))
+    token_shapes = _sds((gb, 1), jnp.int32)
+    step = make_decode_step(model)
+    return CellSpec(
+        arch, shape, kind, cfg, model, plan, step,
+        (params_shapes, token_shapes, cache_shapes), donate=(2,),
+        seq_len=seq, global_batch=gb,
+    )

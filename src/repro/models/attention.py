@@ -1,0 +1,359 @@
+"""Attention: GQA with blockwise-streaming softmax (flash-style), local
+windowed attention, and single-token decode against a KV cache.
+
+Training/prefill attention is a ``lax.scan`` over query blocks with an
+inner scan over KV blocks carrying the running ``(max, denom, acc)`` —
+the standard IO-aware streaming-softmax formulation in pure JAX.  Memory is
+``O(S · block)`` instead of ``O(S²)``, which is what lets the 32k-prefill
+cells compile inside 16 GB/chip.  The causal variant masks block pairs
+above the diagonal; the baseline counts those wasted FLOPs honestly in the
+roofline (§Perf iterates on it — see ``causal_skip`` below).
+
+Grouped-query layout: ``q`` is ``[B, S, K, G, D]`` (K = kv heads, G =
+queries per kv head), ``k``/``v`` are ``[B, S, K, D]``; scores contract
+directly against the shared kv head without materialising repeated K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["flash_attention", "flash_attention_fused", "local_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _pick_block(S: int, pref: int) -> int:
+    """Largest divisor of S that is <= pref (keeps block scans exact for
+    awkward lengths like Whisper's 1500 encoder frames)."""
+    b = min(pref, S)
+    while S % b:
+        b -= 1
+    return max(b, 1)
+
+
+def _stream_softmax_block(q_blk, k_blk, v_blk, m, l, acc, mask):
+    """One KV block update of the streaming softmax.
+
+    q_blk: [B, bq, K, G, D]; k_blk/v_blk: [B, bk, K, D];
+    m, l: [B, K, G, bq]; acc: [B, K, G, bq, D]; mask: [bq, bk] or None.
+    """
+    scale = q_blk.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)
+    ) * scale  # [B, K, G, bq, bk]
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, _NEG)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32)
+    )
+    return m_new, l_new, acc_new
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal_skip: bool = False,
+):
+    """Blockwise attention.  ``q``: [B, S, K, G, D]; ``k``/``v``: [B, S, K, D].
+
+    ``causal_skip=True`` enables the beyond-baseline schedule that skips
+    fully-masked KV blocks (unrolled per-q-block inner scans of exactly
+    ``i+1`` blocks) — used by the §Perf hillclimb; the baseline keeps the
+    uniform masked scan.
+    """
+    B, S, K, G, D = q.shape
+    Skv = k.shape[1]
+    bq = _pick_block(S, q_block)
+    bk = _pick_block(Skv, kv_block)
+    nq, nk = S // bq, Skv // bk
+    qb = q.reshape(B, nq, bq, K, G, D)
+
+    q_pos_base = jnp.arange(nq) * bq
+
+    def q_step(_, qi):
+        q_blk, q0 = qi  # [B, bq, K, G, D], scalar block start
+        m0 = jnp.full((B, K, G, bq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, bq, D), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k0 = ki * bk
+            k_blk = lax.dynamic_slice_in_dim(k, k0, bk, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, k0, bk, axis=1)
+            if causal:
+                qpos = q0 + jnp.arange(bq)
+                kpos = k0 + jnp.arange(bk)
+                mask = qpos[:, None] >= kpos[None, :]
+            else:
+                mask = None
+            m, l, acc = _stream_softmax_block(q_blk, k_blk, v_blk, m, l, acc, mask)
+            return (m, l, acc), None
+
+        if causal and causal_skip:
+            # process only blocks with any unmasked entry:
+            # number of live kv blocks for q block i is ceil((q0+bq)/bk)
+            n_live = (q0 + bq + bk - 1) // bk
+
+            def guarded(carry, ki):
+                do = ki < n_live
+
+                def run(c):
+                    return kv_step(c, ki)[0]
+
+                carry = lax.cond(do, run, lambda c: c, carry)
+                return carry, None
+
+            (m, l, acc), _ = lax.scan(guarded, (m0, l0, a0), jnp.arange(nk))
+        else:
+            (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)  # [B, K, G, bq, D]
+
+    _, outs = lax.scan(q_step, None, (jnp.moveaxis(qb, 1, 0), q_pos_base))
+    # outs: [nq, B, K, G, bq, D] -> [B, S, K, G, D]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * bq, K, G, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused-VJP flash attention (§Perf hillclimb H1)
+#
+# The naive scan formulation above is numerically fine but its BACKWARD is
+# memory-catastrophic under jax AD: the per-(q-block, kv-block) probability
+# tensors become scan residuals, stacked to a full [nq, nk, B, K, G, bq, bk]
+# f32 buffer — the S^2 matrix flash exists to avoid (measured: 107 GiB/dev
+# temp for llama3-405b train_4k).  ``flash_attention_fused`` implements the
+# standard flash backward as a custom VJP: residuals are (q, k, v, out, lse)
+# — O(S) — and the bwd recomputes score blocks on the fly, accumulating
+# dk/dv across query blocks.
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+
+def _flash_fwd_loop(q, k, v, causal, bq, bk, parallel_q=False):
+    """Returns (out [B,S,K,G,D] f32, lse [B,K,G,S] f32).
+
+    ``parallel_q=True`` maps over query blocks with ``vmap`` instead of
+    ``scan`` — the block dim then stays a *parallel* HLO dimension that
+    GSPMD can shard over 'model' (hillclimb H3: shards attention FLOPs for
+    archs whose head counts don't divide the TP axis, e.g. qwen2's 28).
+    """
+    B, S, K, G, D = q.shape
+    Skv = k.shape[1]
+    nq, nk = S // bq, Skv // bk
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, K, G, D), 1, 0)  # [nq, B, bq, K, G, D]
+    if parallel_q:
+        from repro.distributed.meshctx import constrain as _constrain
+
+        qb = _constrain(qb, ("model", "data", None, None, None, None))
+
+    def q_step(q_blk, q0):
+        m0 = jnp.full((B, K, G, bq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, bq, D), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k0 = ki * bk
+            k_blk = lax.dynamic_slice_in_dim(k, k0, bk, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, k0, bk, axis=1)
+            mask = None
+            if causal:
+                qpos = q0 + jnp.arange(bq)
+                kpos = k0 + jnp.arange(bk)
+                mask = qpos[:, None] >= kpos[None, :]
+            m, l, acc = _stream_softmax_block(q_blk, k_blk, v_blk, m, l, acc, mask)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    q_pos = jnp.arange(nq) * bq
+    if parallel_q:
+        outs, lses = jax.vmap(q_step)(qb, q_pos)
+    else:
+        _, (outs, lses) = lax.scan(lambda _, xs: (None, q_step(*xs)), None, (qb, q_pos))
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5).reshape(B, S, K, G, D)
+    lse = jnp.moveaxis(lses, 0, 1)  # [B, nq, K, G, bq]
+    lse = lse.transpose(0, 2, 3, 1, 4).reshape(B, K, G, S)
+    return out, lse
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_fused(
+    q, k, v, causal: bool = True, q_block: int = 512, kv_block: int = 1024,
+    parallel_q: bool = False,
+):
+    """Flash attention with O(S) residuals (fused custom VJP).
+
+    Inputs stay in their compute dtype (bf16); only the per-block score /
+    accumulator math runs in f32 inside ``_stream_softmax_block`` — an
+    upfront f32 cast of q/k/v doubled the memory-roofline term 7x on the
+    whisper cells (§Perf iteration log).
+    """
+    bq = _pick_block(q.shape[1], q_block)
+    bk = _pick_block(k.shape[1], kv_block)
+    out, _ = _flash_fwd_loop(q, k, v, causal, bq, bk, parallel_q)
+    return out.astype(q.dtype)
+
+
+def _flash_fused_fwd(q, k, v, causal, q_block, kv_block, parallel_q):
+    bq = _pick_block(q.shape[1], q_block)
+    bk = _pick_block(k.shape[1], kv_block)
+    out, lse = _flash_fwd_loop(q, k, v, causal, bq, bk, parallel_q)
+    return out.astype(q.dtype), (q, k, v, out.astype(q.dtype), lse)
+
+
+def _flash_fused_bwd(causal, q_block, kv_block, parallel_q, res, do):
+    q, k, v, out, lse = res
+    B, S, K, G, D = q.shape
+    Skv = k.shape[1]
+    bq = _pick_block(S, q_block)
+    bk = _pick_block(Skv, kv_block)
+    nq, nk = S // bq, Skv // bk
+    scale = D**-0.5
+    qf = q.astype(jnp.float32).reshape(B, nq, bq, K, G, D)
+    dof = do.astype(jnp.float32).reshape(B, nq, bq, K, G, D)
+    of = out.astype(jnp.float32).reshape(B, nq, bq, K, G, D)
+    lseb = lse.reshape(B, K, G, nq, bq)
+    # delta_i = rowsum(do * o)
+    delta = jnp.einsum("bnqkgd,bnqkgd->bkgnq", dof, of)  # [B,K,G,nq,bq]
+
+    def q_block_bwd(q_blk, do_blk, lse_blk, delta_blk, q0):
+        """Returns (dq_blk, dk_partial, dv_partial) for one query block."""
+
+        def kv_step(carry2, ki):
+            dq_blk, dk_acc, dv_acc = carry2
+            k0 = ki * bk
+            # per-block f32 casts only (full-tensor casts double HBM traffic)
+            k_blk = lax.dynamic_slice_in_dim(k, k0, bk, axis=1).astype(jnp.float32)
+            v_blk = lax.dynamic_slice_in_dim(v, k0, bk, axis=1).astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk) * scale
+            if causal:
+                qpos = q0 + jnp.arange(bq)
+                kpos = k0 + jnp.arange(bk)
+                mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+                s = jnp.where(mask, s, _NEG)
+            p = jnp.exp(s - lse_blk[..., None])  # [B,K,G,bq,bk]
+            dv_upd = jnp.einsum("bkgqs,bqkgd->bskd", p, do_blk)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_blk, v_blk)
+            ds = p * (dp - delta_blk[..., None])
+            dq_upd = jnp.einsum("bkgqs,bskd->bqkgd", ds, k_blk) * scale
+            dk_upd = jnp.einsum("bkgqs,bqkgd->bskd", ds, q_blk) * scale
+            dq_blk = dq_blk + dq_upd
+            dk_acc = lax.dynamic_update_slice_in_dim(
+                dk_acc, lax.dynamic_slice_in_dim(dk_acc, k0, bk, 1) + dk_upd, k0, 1
+            )
+            dv_acc = lax.dynamic_update_slice_in_dim(
+                dv_acc, lax.dynamic_slice_in_dim(dv_acc, k0, bk, 1) + dv_upd, k0, 1
+            )
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, bq, K, G, D), jnp.float32)
+        dk0 = jnp.zeros((B, Skv, K, D), jnp.float32)
+        dv0 = jnp.zeros((B, Skv, K, D), jnp.float32)
+        (dq_blk, dk_p, dv_p), _ = lax.scan(kv_step, (dq0, dk0, dv0), jnp.arange(nk))
+        return dq_blk, dk_p, dv_p
+
+    q_pos = jnp.arange(nq) * bq
+    xs = (
+        jnp.moveaxis(qf, 1, 0),
+        jnp.moveaxis(dof, 1, 0),
+        jnp.moveaxis(lseb, 3, 0),
+        jnp.moveaxis(delta, 3, 0),
+        q_pos,
+    )
+    if parallel_q:
+        dqs, dk_p, dv_p = jax.vmap(q_block_bwd)(*xs)
+        dk, dv = dk_p.sum(axis=0), dv_p.sum(axis=0)
+    else:
+        def q_step(carry, x):
+            dk_acc, dv_acc = carry
+            dq_blk, dk_p, dv_p = q_block_bwd(*x)
+            return (dk_acc + dk_p, dv_acc + dv_p), dq_blk
+
+        dk0 = jnp.zeros((B, Skv, K, D), jnp.float32)
+        dv0 = jnp.zeros((B, Skv, K, D), jnp.float32)
+        (dk, dv), dqs = lax.scan(q_step, (dk0, dv0), xs)
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, K, G, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_fused.defvjp(_flash_fused_fwd, _flash_fused_bwd)
+
+
+def local_attention(q, k, v, *, window: int):
+    """Sliding-window causal attention (RecurrentGemma local layers).
+
+    Query block ``i`` (block size = window) attends to blocks ``i-1, i``
+    with the exact mask ``0 <= qpos - kpos < window`` — static structure,
+    ``O(S · 2w)`` memory and FLOPs.
+    """
+    B, S, K, G, D = q.shape
+    w = min(window, S)
+    pad = (-S) % w
+    if pad:  # end-pad: padded keys sit at future positions -> masked out
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        S_out, S = S, S + pad
+    else:
+        S_out = S
+    n = S // w
+    qb = q.reshape(B, n, w, K, G, D)
+    kb = k.reshape(B, n, w, K, D)
+    vb = v.reshape(B, n, w, K, D)
+    # previous block (zero-padded at i=0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # [B, n, 2w, K, D]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    scale = D**-0.5
+    s = jnp.einsum(
+        "bnqkgd,bnskd->bnkgqs", qb.astype(jnp.float32), k2.astype(jnp.float32)
+    ) * scale  # [B, n, K, G, w, 2w]
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w
+    delta = qpos - kpos
+    mask = (delta >= 0) & (delta < w)
+    first_block = jnp.arange(n) == 0
+    kvalid = (jnp.arange(2 * w) >= w)[None, :] | (~first_block)[:, None]
+    full_mask = mask[None] & kvalid[:, None, :]  # [n, w, 2w]
+    s = jnp.where(full_mask[None, :, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnkgqs,bnskd->bnqkgd", p, v2.astype(jnp.float32))
+    out = out.reshape(B, S, K, G, D).astype(q.dtype)
+    return out[:, :S_out]
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention against a cache.
+
+    ``q``: [B, 1, K, G, D]; caches: [B, Smax, K, D]; ``pos``: [B] current
+    lengths (new token goes at index ``pos``; caller already inserted it).
+    """
+    Smax = k_cache.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale  # [B, K, G, 1, Smax]
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]  # [B, Smax]
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Shared building blocks: init helpers, norms, activations, RoPE, dtype policy.
+
+The module system is deliberately minimal and functional: parameters are
+nested dicts of ``jnp.ndarray`` created by ``init_*`` functions and consumed
+by pure ``apply`` functions.  No framework dependency; every array's
+position in the tree is meaningful to the sharding rules
+(``repro/distributed/sharding.py``), which match on path names.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Policy",
+    "dense_init",
+    "rmsnorm",
+    "layernorm",
+    "norm_apply",
+    "activation",
+    "rope_freqs",
+    "apply_rope",
+    "take_embedding",
+]
+
+
+class Policy:
+    """Mixed-precision policy: fp32 master params, bf16 compute."""
+
+    param_dtype = jnp.float32
+    compute_dtype = jnp.bfloat16
+
+    @classmethod
+    def cast(cls, x):
+        return jax.tree.map(
+            lambda a: a.astype(cls.compute_dtype)
+            if a.dtype in (jnp.float32, jnp.bfloat16)
+            else a,
+            x,
+        )
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish; exact law is irrelevant to
+    the systems claims, stability is)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, weight, bias=None, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * (1.0 + weight.astype(jnp.float32))
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def norm_apply(kind: str, x, params):
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params.get("bias"))
+    return rmsnorm(x, params["scale"])
+
+
+def activation(kind: str, x):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":  # squared ReLU (Primer / Nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies for rotary embeddings: ``[head_dim // 2]``."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate ``x [..., S, ..., D]``-like arrays given per-token positions.
+
+    ``x``: ``[B, S, H, D]`` (or KV-shaped); ``positions``: ``[B, S]`` int32.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]  # [B, S, 1, D/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def take_embedding(embed, tokens):
+    """Token embedding lookup, compute-dtype output."""
+    return embed[tokens].astype(Policy.compute_dtype)

@@ -1,0 +1,516 @@
+"""Unified decoder-only LM covering all assigned families.
+
+One model assembly handles dense / MoE / SSM / hybrid / early-fusion-VLM
+(and the decoder half of the enc-dec family): the config's
+``layer_groups()`` describe the layer stack as repeating groups of
+``LayerSpec``s, and the assembly ``lax.scan``s over each group's repeats
+with stacked parameters — HLO size stays bounded at 126 layers, remat
+wraps the scan body, and FSDP-style parameter gathers happen per layer
+inside the scan (DESIGN.md §9).
+
+Three entry points per model:
+  * ``forward``  — training forward, full logits ``[B, S, V]``;
+  * ``prefill``  — forward that also emits the serving cache;
+  * ``decode``   — one-token step against the cache (``serve_step``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, BlockGroup, LayerSpec
+from repro.distributed.meshctx import constrain
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.common import Policy, dense_init, norm_apply, take_embedding, apply_rope
+
+__all__ = ["init_decoder", "decoder_forward", "decoder_prefill", "decoder_decode", "init_cache"]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_norm(cfg: ArchConfig):
+    p = {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _init_attn(key, cfg: ArchConfig, cross: bool = False):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, K * hd)),
+        "wv": dense_init(ks[2], (d, K * hd)),
+        "wo": dense_init(ks[3], (H * hd, d), scale=(H * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((K * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((K * hd,), jnp.float32)
+    return p
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": _init_norm(cfg)}
+    if spec.mixer in ("attn", "local"):
+        p["attn"] = _init_attn(ks[0], cfg)
+    elif spec.mixer == "xattn":
+        p["attn"] = _init_attn(ks[0], cfg)
+        p["xnorm"] = _init_norm(cfg)
+        p["xatt"] = _init_attn(ks[3], cfg, cross=True)
+    elif spec.mixer == "ssd":
+        p["ssd"] = ssd_mod.init_ssd_block(ks[0], cfg)
+    elif spec.mixer == "rglru":
+        p["rglru"] = rglru_mod.init_rglru_block(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["norm2"] = _init_norm(cfg)
+        if spec.ffn == "dense":
+            p["ffn"] = ffn_mod.init_dense_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_act)
+        else:
+            p["moe"] = ffn_mod.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.ffn_act)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_group(key, group: BlockGroup, cfg: ArchConfig):
+    """Params for one BlockGroup: per-spec-position stacks of `repeat`."""
+    out = {}
+    for i, spec in enumerate(group.specs):
+        ks = jax.random.split(key, group.repeat + 1)
+        key = ks[0]
+        out[f"p{i}"] = _stack([_init_layer(k, spec, cfg) for k in ks[1:]])
+    return out
+
+
+def init_decoder(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3 + len(cfg.layer_groups()))
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": _init_norm(cfg),
+        "groups": [
+            init_group(ks[3 + gi], g, cfg) for gi, g in enumerate(cfg.layer_groups())
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), scale=0.02)
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+def _batch_axis(cfg: ArchConfig) -> str:
+    return "batch_all" if cfg.layout == "dp_only" else "data"
+
+
+def _w(p, key, dtype, cfg: ArchConfig, logical):
+    """Weight in compute dtype, optionally constrained to its gathered
+    (TP-only) layout so GSPMD must all-gather the WEIGHT over the FSDP axis
+    rather than partial-summing / gathering activations."""
+    w = p[key].astype(dtype)
+    if cfg.fsdp_gather:
+        w = constrain(w, logical)
+    return w
+
+
+def _qkv(p, x, positions, cfg: ArchConfig, rope: bool = True):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // K
+    head_sp = None if (cfg.layout == "dp_only" or cfg.q_parallel) else "model"
+    q = x @ _w(p, "wq", x.dtype, cfg, (None, head_sp))
+    k = x @ _w(p, "wk", x.dtype, cfg, (None, head_sp))
+    v = x @ _w(p, "wv", x.dtype, cfg, (None, head_sp))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    # constrain on the flattened head dim (always divisible by the TP axis;
+    # GSPMD propagates through the [B,S,K,G,hd] reshape).  In dp_only
+    # layout (or with parallel-q attention, which shards the q-block dim
+    # instead) the head dim stays unsharded.
+    ba = _batch_axis(cfg)
+    head_ax = None if (cfg.layout == "dp_only" or cfg.q_parallel) else "model"
+    q = constrain(q, (ba, None, head_ax))
+    k = constrain(k, (ba, None, head_ax))
+    v = constrain(v, (ba, None, head_ax))
+    q = q.reshape(B, S, K, G, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if rope:
+        qf = q.reshape(B, S, K * G, hd)
+        qf = apply_rope(qf, positions, cfg.rope_theta)
+        q = qf.reshape(B, S, K, G, hd)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_out(p, o, cfg: ArchConfig):
+    # o: [B, S, K, G, hd]; head h = k*G + g matches the _qkv packing
+    B, S = o.shape[0], o.shape[1]
+    head_sp = None if (cfg.layout == "dp_only" or cfg.q_parallel) else "model"
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ _w(p, "wo", o.dtype, cfg, (head_sp, None))
+
+
+def _mixer_forward(spec, p, x, positions, cfg: ArchConfig, enc_out, want_cache: bool):
+    """Returns (out, cache_or_None)."""
+    if spec.mixer in ("attn", "local"):
+        q, k, v = _qkv(p["attn"], x, positions, cfg)
+        if spec.mixer == "attn":
+            if cfg.flash_vjp:
+                o = attn.flash_attention_fused(
+                    q, k, v, True, cfg.q_block, cfg.kv_block, cfg.q_parallel
+                )
+            else:
+                o = attn.flash_attention(
+                    q, k, v, causal=True, q_block=cfg.q_block, kv_block=cfg.kv_block
+                )
+        else:
+            o = attn.local_attention(q, k, v, window=cfg.hybrid.window)
+        out = _attn_out(p["attn"], o, cfg)
+        cache = None
+        if want_cache:
+            if spec.mixer == "local":
+                w = cfg.hybrid.window
+                S = k.shape[1]
+                keep = min(w, S)
+                cache = {"k": k[:, S - keep :], "v": v[:, S - keep :]}
+            else:
+                cache = {"k": k, "v": v}
+        return out, cache
+    if spec.mixer == "xattn":
+        q, k, v = _qkv(p["attn"], x, positions, cfg)
+        if cfg.flash_vjp:
+            o = attn.flash_attention_fused(q, k, v, True, cfg.q_block, cfg.kv_block, cfg.q_parallel)
+        else:
+            o = attn.flash_attention(q, k, v, causal=True, q_block=cfg.q_block, kv_block=cfg.kv_block)
+        out = _attn_out(p["attn"], o, cfg)
+        cache = {"k": k, "v": v} if want_cache else None
+        return out, cache  # cross-attn handled by caller (needs its own norm)
+    if spec.mixer == "ssd":
+        out = ssd_mod.ssd_block_forward(p["ssd"], x, cfg)
+        cache = None
+        if want_cache:
+            # rebuild decode-ready state by replaying the tail: cheap exact
+            # approach — run a one-step decode cache from full forward is
+            # complex; instead recompute final state via chunked scan
+            cache = _ssd_state_from_forward(p["ssd"], x, cfg)
+        return out, cache
+    if spec.mixer == "rglru":
+        out, state = rglru_mod.rglru_block_forward(p["rglru"], x, cfg)
+        cache = None
+        if want_cache:
+            hx = x @ p["rglru"]["w_x_in"].astype(x.dtype)
+            cache = {"conv": hx[:, -3:, :], "state": state}
+        return out, cache
+    raise ValueError(spec.mixer)
+
+
+def _ssd_state_from_forward(p, x, cfg: ArchConfig):
+    """Final (conv, ssm) state after consuming ``x`` — for prefill→decode."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    _, xi, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1
+    )
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_tail = xbc[:, -(s.conv_width - 1) :, :]
+    xbc_c = ssd_mod._causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xi, Bm, Cm = jnp.split(xbc_c, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    lA = dt * A[None, None, :]  # [B, S, H]
+    cum = jnp.cumsum(lA, axis=1)
+    total = cum[:, -1][:, None, :]  # [B, 1, H]
+    w = jnp.exp(total - cum) * dt  # decay from t..S times dt
+    xh = xi.reshape(*xi.shape[:2], nh, s.head_dim).astype(jnp.float32)
+    state = jnp.einsum("bth,btn,bthp->bhnp", w, Bm.astype(jnp.float32), xh)
+    return {"conv": conv_tail, "state": state}
+
+
+def _layer_forward(spec, p, x, positions, cfg, enc_out, want_cache):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    mix, cache = _mixer_forward(spec, p, h, positions, cfg, enc_out, want_cache)
+    x = x + mix
+    if spec.mixer == "xattn":
+        hx = norm_apply(cfg.norm, x, p["xnorm"])
+        B, S, _ = hx.shape
+        K, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+        q = (hx @ p["xatt"]["wq"].astype(hx.dtype)).reshape(B, S, K, G, hd)
+        ek = (enc_out @ p["xatt"]["wk"].astype(hx.dtype)).reshape(B, -1, K, hd)
+        ev = (enc_out @ p["xatt"]["wv"].astype(hx.dtype)).reshape(B, -1, K, hd)
+        o = attn.flash_attention(q, ek, ev, causal=False, q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + _attn_out(p["xatt"], o, cfg)
+        if want_cache and cache is not None:
+            cache = dict(cache, xk=ek, xv=ev)
+    aux = {}
+    if spec.ffn != "none":
+        h2 = norm_apply(cfg.norm, x, p["norm2"])
+        if spec.ffn == "dense":
+            y = ffn_mod.dense_ffn(p["ffn"], h2, cfg.ffn_act, cfg=cfg)
+        else:
+            y, aux = ffn_mod.moe_ffn(
+                p["moe"], h2, cfg.moe, cfg.ffn_act,
+                gather_dispatch=cfg.moe_gather, arch_cfg=cfg,
+            )
+        x = x + y
+    x = constrain(x, (_batch_axis(cfg), None, None))
+    return x, cache, aux
+
+
+# --------------------------------------------------------------------------
+# model-level forward / prefill
+# --------------------------------------------------------------------------
+
+def _remat_policy(cfg: ArchConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _run_groups(params, x, positions, cfg: ArchConfig, enc_out, want_cache: bool,
+                groups: list[BlockGroup] | None = None):
+    groups = groups if groups is not None else cfg.layer_groups()
+    caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for gi, group in enumerate(groups):
+        gp = params["groups"][gi]
+
+        def body(carry, layer_p):
+            x, aux_acc = carry
+            layer_caches = {}
+            for i, spec in enumerate(group.specs):
+                x, cache, aux = _layer_forward(
+                    spec, layer_p[f"p{i}"], x, positions, cfg, enc_out, want_cache
+                )
+                if want_cache:
+                    layer_caches[f"p{i}"] = cache
+                for v in aux.values():
+                    aux_acc = aux_acc + v
+            return (x, aux_acc), (layer_caches if want_cache else None)
+
+        policy = _remat_policy(cfg)
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux_total), ys = lax.scan(body, (x, aux_total), gp)
+        if want_cache:
+            caches.append(ys)
+    return x, caches, aux_total
+
+
+def decoder_forward(params, tokens, cfg: ArchConfig, enc_out=None):
+    """Training forward: tokens [B, S] -> logits [B, S, V] (f32), aux."""
+    B, S = tokens.shape
+    ba = _batch_axis(cfg)
+    x = take_embedding(params["embed"], tokens)
+    x = constrain(x, (ba, None, None))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, _, aux = _run_groups(params, x, positions, cfg, enc_out, want_cache=False)
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    unemb = params.get("unembed")
+    w = (unemb if unemb is not None else params["embed"].T).astype(x.dtype)
+    vocab_sp = "model" if cfg.layout == "tp" else None
+    if cfg.fsdp_gather:
+        w = constrain(w, (None, vocab_sp))
+    logits = (x @ w).astype(jnp.float32)
+    logits = constrain(logits, (ba, None, vocab_sp))
+    return logits, {"aux_loss": aux}
+
+
+def decoder_prefill(params, tokens, cfg: ArchConfig, enc_out=None, pad_cache_to: int | None = None):
+    """Prefill: returns (last-position logits [B, V], cache pytree)."""
+    B, S = tokens.shape
+    x = take_embedding(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, caches, _ = _run_groups(params, x, positions, cfg, enc_out, want_cache=True)
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    last = x[:, -1, :]
+    unemb = params.get("unembed")
+    w = unemb if unemb is not None else params["embed"].T
+    logits = (last @ w.astype(x.dtype)).astype(jnp.float32)
+    if pad_cache_to is not None:
+        caches = _pad_kv_caches(caches, cfg, pad_cache_to)
+    pos = jnp.full((B,), S, jnp.int32)  # next token's index
+    return logits, {"groups": caches, "pos": pos}
+
+
+def _pad_kv_caches(caches, cfg: ArchConfig, smax: int):
+    """Pad KV time axes (axis 2 of [R, B, S, K, hd]) to ``smax`` slots."""
+    out = []
+    for group_cache in caches:
+        new_group = {}
+        for key, c in group_cache.items():
+            if c is None:
+                new_group[key] = None
+                continue
+            nc = dict(c)
+            for name in ("k", "v"):
+                if name in nc:
+                    arr = nc[name]
+                    S = arr.shape[2]
+                    if S < smax:
+                        padw = [(0, 0)] * arr.ndim
+                        padw[2] = (0, smax - S)
+                        nc[name] = jnp.pad(arr, padw)
+                    elif S > smax:
+                        nc[name] = arr[:, :, -smax:]
+            new_group[key] = nc
+        out.append(new_group)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cache init + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int | None = None,
+               dtype=None):
+    """Zeroed serving cache matching the decode step's expectations."""
+    dtype = dtype or Policy.compute_dtype
+    K, hd = cfg.n_kv_heads, cfg.hd
+    groups = []
+    for group in cfg.layer_groups():
+        g = {}
+        for i, spec in enumerate(group.specs):
+            R = group.repeat
+            if spec.mixer == "attn":
+                c = {
+                    "k": jnp.zeros((R, batch, max_len, K, hd), dtype),
+                    "v": jnp.zeros((R, batch, max_len, K, hd), dtype),
+                }
+            elif spec.mixer == "local":
+                w = min(cfg.hybrid.window, max_len)
+                c = {
+                    "k": jnp.zeros((R, batch, w, K, hd), dtype),
+                    "v": jnp.zeros((R, batch, w, K, hd), dtype),
+                }
+            elif spec.mixer == "xattn":
+                assert enc_len is not None
+                c = {
+                    "k": jnp.zeros((R, batch, max_len, K, hd), dtype),
+                    "v": jnp.zeros((R, batch, max_len, K, hd), dtype),
+                    "xk": jnp.zeros((R, batch, enc_len, K, hd), dtype),
+                    "xv": jnp.zeros((R, batch, enc_len, K, hd), dtype),
+                }
+            elif spec.mixer == "ssd":
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (R, *a.shape)),
+                    ssd_mod.init_ssd_cache(cfg, batch),
+                )
+            elif spec.mixer == "rglru":
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (R, *a.shape)),
+                    rglru_mod.init_rglru_cache(cfg, batch),
+                )
+            else:
+                raise ValueError(spec.mixer)
+            g[f"p{i}"] = c
+        groups.append(g)
+    return {"groups": groups, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _layer_decode(spec, p, x, cache, pos, cfg: ArchConfig):
+    """x: [B, 1, d]; returns (x, new_cache)."""
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    B = x.shape[0]
+    K, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    if spec.mixer in ("attn", "local", "xattn"):
+        q, k, v = _qkv(p["attn"], h, pos[:, None], cfg)
+        if spec.mixer == "local":
+            w = cache["k"].shape[1]
+            slot = (pos % w).astype(jnp.int32)
+            kc = _scatter_time(cache["k"], k[:, 0], slot)
+            vc = _scatter_time(cache["v"], v[:, 0], slot)
+            # ring buffer holds the last `w` tokens; all slots written so
+            # far are valid (pos+1 >= w ⇒ all w)
+            valid_upto = jnp.minimum(pos, w - 1)
+            o = attn.decode_attention(q, kc, vc, valid_upto)
+        else:
+            slot = pos.astype(jnp.int32)
+            kc = _scatter_time(cache["k"], k[:, 0], slot)
+            vc = _scatter_time(cache["v"], v[:, 0], slot)
+            o = attn.decode_attention(q, kc, vc, pos)
+        x = x + _attn_out(p["attn"], o, cfg)
+        new_cache = dict(cache, k=kc, v=vc)
+        if spec.mixer == "xattn":
+            hx = norm_apply(cfg.norm, x, p["xnorm"])
+            q2 = (hx @ p["xatt"]["wq"].astype(hx.dtype)).reshape(B, 1, K, G, hd)
+            enc_len = cache["xk"].shape[1]
+            full = jnp.full((B,), enc_len - 1, jnp.int32)
+            o2 = attn.decode_attention(q2, cache["xk"], cache["xv"], full)
+            x = x + _attn_out(p["xatt"], o2, cfg)
+    elif spec.mixer == "ssd":
+        y, nc = ssd_mod.ssd_block_decode(p["ssd"], h, cache, cfg)
+        x = x + y
+        new_cache = nc
+    elif spec.mixer == "rglru":
+        y, nc = rglru_mod.rglru_block_decode(p["rglru"], h, cache, cfg)
+        x = x + y
+        new_cache = nc
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        h2 = norm_apply(cfg.norm, x, p["norm2"])
+        if spec.ffn == "dense":
+            x = x + ffn_mod.dense_ffn(p["ffn"], h2, cfg.ffn_act)
+        else:
+            y, _ = ffn_mod.moe_ffn(p["moe"], h2, cfg.moe, cfg.ffn_act, no_drop=True)
+            x = x + y
+    return x, new_cache
+
+
+def _scatter_time(cache_kv, new_kv, slot):
+    """cache_kv: [B, S, K, hd]; new_kv: [B, K, hd]; slot: [B]."""
+    B = cache_kv.shape[0]
+    return cache_kv.at[jnp.arange(B), slot].set(new_kv.astype(cache_kv.dtype))
+
+
+def decoder_decode(params, token, cache, cfg: ArchConfig):
+    """serve_step: one new token.  token [B, 1] int32 -> (logits [B, V], cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]  # index of the new token
+    x = take_embedding(params["embed"], token)
+    new_groups = []
+    for gi, group in enumerate(cfg.layer_groups()):
+        gp = params["groups"][gi]
+        gc = cache["groups"][gi]
+
+        def body(x, inp):
+            layer_p, layer_c = inp
+            new_c = {}
+            for i, spec in enumerate(group.specs):
+                x, nc = _layer_decode(spec, layer_p[f"p{i}"], x, layer_c[f"p{i}"], pos, cfg)
+                new_c[f"p{i}"] = nc
+            return x, new_c
+
+        x, ys = lax.scan(body, x, (gp, gc))
+        new_groups.append(ys)
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    unemb = params.get("unembed")
+    w = unemb if unemb is not None else params["embed"].T
+    logits = (x[:, 0] @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"groups": new_groups, "pos": pos + 1}

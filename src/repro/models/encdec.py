@@ -1,0 +1,83 @@
+"""Whisper-style encoder–decoder (audio family).
+
+The conv frontend is a STUB per the assignment brief: ``input_specs()``
+supplies precomputed frame embeddings ``[B, n_frames, d]`` (what the two
+strided conv1d layers would produce).  The encoder is a stack of
+bidirectional attention blocks; the decoder is the unified decoder with
+``xattn`` layers (causal self-attention + cross-attention to the encoder
+output).  Decode caches both the growing self-attn KV and the static
+cross-attn KV (computed once from the encoder output).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, BlockGroup, LayerSpec
+from repro.models import attention as attn
+from repro.models import decoder as dec
+from repro.models.common import Policy, norm_apply
+
+__all__ = ["init_encdec", "encdec_forward", "encode", "encdec_prefill", "encdec_decode"]
+
+
+def init_encdec(key, cfg: ArchConfig):
+    k_enc, k_dec = jax.random.split(key)
+    params = dec.init_decoder(k_dec, cfg)
+    enc_groups = cfg.encoder_groups()
+    ks = jax.random.split(k_enc, len(enc_groups) + 1)
+    params["encoder"] = {
+        "groups": [dec.init_group(ks[1 + gi], g, cfg) for gi, g in enumerate(enc_groups)],
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), jnp.float32)},
+    }
+    return params
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: [B, T, d] precomputed frame embeddings -> [B, T, d]."""
+    x = frames.astype(Policy.compute_dtype)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    groups = cfg.encoder_groups()
+
+    for gi, group in enumerate(groups):
+        gp = params["encoder"]["groups"][gi]
+
+        def body(carry, layer_p):
+            x = carry
+            for i, spec in enumerate(group.specs):
+                p = layer_p[f"p{i}"]
+                h = norm_apply(cfg.norm, x, p["norm1"])
+                q, k, v = dec._qkv(p["attn"], h, positions, cfg, rope=False)
+                o = attn.flash_attention(
+                    q, k, v, causal=False, q_block=cfg.q_block, kv_block=cfg.kv_block
+                )
+                x = x + dec._attn_out(p["attn"], o, cfg)
+                h2 = norm_apply(cfg.norm, x, p["norm2"])
+                from repro.models import ffn as ffn_mod
+
+                x = x + ffn_mod.dense_ffn(p["ffn"], h2, cfg.ffn_act)
+            return x, None
+
+        policy = dec._remat_policy(cfg)
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy)
+        x, _ = lax.scan(body, x, gp)
+    return norm_apply(cfg.norm, x, params["encoder"]["final_norm"])
+
+
+def encdec_forward(params, tokens, frames, cfg: ArchConfig):
+    enc_out = encode(params, frames, cfg)
+    return dec.decoder_forward(params, tokens, cfg, enc_out=enc_out)
+
+
+def encdec_prefill(params, tokens, frames, cfg: ArchConfig, pad_cache_to=None):
+    enc_out = encode(params, frames, cfg)
+    return dec.decoder_prefill(params, tokens, cfg, enc_out=enc_out, pad_cache_to=pad_cache_to)
+
+
+def encdec_decode(params, token, cache, cfg: ArchConfig):
+    """Cross-attn KV lives in the cache; no encoder pass per token."""
+    return dec.decoder_decode(params, token, cache, cfg)

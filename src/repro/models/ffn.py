@@ -1,0 +1,191 @@
+"""Feed-forward layers: dense (GLU / squared-ReLU variants) and MoE.
+
+The MoE uses GShard-style dense dispatch: tokens are split into groups,
+top-k routing builds a ``[group, experts, capacity]`` combine tensor, and
+dispatch/return are einsums.  Under the production mesh the expert axis is
+sharded over ``'model'`` (expert parallelism) so the dispatch einsum lowers
+to the all-to-all that dominates the MoE roofline (see EXPERIMENTS.md —
+dbrx/deepseek cells).  DeepSeekMoE-style shared experts run densely beside
+the routed ones.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.distributed.meshctx import constrain
+from repro.models.common import Policy, activation, dense_init
+
+__all__ = [
+    "init_dense_ffn",
+    "dense_ffn",
+    "init_moe",
+    "moe_ffn",
+]
+
+
+def init_dense_ffn(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff)),
+        "w_out": dense_init(ks[1], (d_ff, d_model)),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def _w(params, key, dtype, cfg: ArchConfig | None, logical):
+    w = params[key].astype(dtype)
+    if cfg is not None and getattr(cfg, "fsdp_gather", False):
+        w = constrain(w, logical)
+    return w
+
+
+def dense_ffn(params, x, act: str, cfg: ArchConfig | None = None):
+    """x: [..., d]."""
+    ff_sp = "model" if (cfg is None or cfg.layout != "dp_only") else None
+    h = x @ _w(params, "w_in", x.dtype, cfg, (None, ff_sp))
+    if act in ("swiglu", "geglu"):
+        g = x @ _w(params, "w_gate", x.dtype, cfg, (None, ff_sp))
+        h = h * (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g))
+    else:
+        h = activation(act, h)
+    return h @ _w(params, "w_out", x.dtype, cfg, (ff_sp, None))
+
+
+def init_moe(key, d_model: int, cfg: MoECfg, act: str):
+    ks = jax.random.split(key, 6)
+    glu = act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d_model, cfg.n_experts), scale=0.02),
+        "w_in": dense_init(ks[1], (cfg.n_experts, d_model, cfg.d_ff_expert)),
+        "w_out": dense_init(ks[2], (cfg.n_experts, cfg.d_ff_expert, d_model)),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[3], (cfg.n_experts, d_model, cfg.d_ff_expert))
+    if cfg.n_shared:
+        ff_sh = (cfg.d_ff_shared or cfg.d_ff_expert) * cfg.n_shared
+        p["shared"] = init_dense_ffn(ks[4], d_model, ff_sh, act)
+    return p
+
+
+def moe_ffn(
+    params,
+    x,
+    cfg: MoECfg,
+    act: str,
+    group_size: int = 4096,
+    no_drop: bool = False,
+    gather_dispatch: bool = False,
+    arch_cfg: ArchConfig | None = None,
+):
+    """Top-k routed experts with capacity-bounded dispatch.
+
+    ``x``: [B, S, d].  Returns [B, S, d] plus aux losses dict.
+
+    ``no_drop=True`` sets capacity to the worst case (``gs * top_k``) so no
+    token is ever dropped — used by the decode path, where capacity drops
+    would silently skip the FFN for live requests.  Training keeps the
+    GShard capacity-factor semantics (drops are part of the algorithm and
+    of the roofline).
+
+    ``gather_dispatch=True`` (§Perf hillclimb H2) replaces the classic
+    GShard one-hot dispatch/combine einsums — which cost
+    ``O(tokens · E · C · d)`` real MXU FLOPs, 9x the *useful* expert FLOPs
+    for dbrx — with gather/scatter indexing (0 FLOPs in the cost model and
+    on hardware: data movement only).  Identical routing semantics,
+    validated against the einsum path in tests/test_models.py.
+    """
+    B, S, d = x.shape
+    G = B * S
+    gs = min(group_size, G)
+    # pad token count to a multiple of the group size
+    n_groups = -(-G // gs)
+    pad = n_groups * gs - G
+    xf = x.reshape(G, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)])
+    xg = xf.reshape(n_groups, gs, d)
+
+    logits = (xg @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [n, g, E]
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)  # [n, g, k]
+    if cfg.router_norm_topk:
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    if no_drop:
+        capacity = gs * cfg.top_k
+    else:
+        capacity = max(1, int(cfg.capacity_factor * gs * cfg.top_k / cfg.n_experts))
+    # one-hot expert assignment [n, g, k, E]
+    assign = jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue
+    pos_in_expert = jnp.cumsum(assign.reshape(n_groups, gs * cfg.top_k, cfg.n_experts), axis=1)
+    pos_in_expert = (pos_in_expert - 1).reshape(n_groups, gs, cfg.top_k, cfg.n_experts)
+    keep = (pos_in_expert < capacity) & (assign > 0)
+    pos_clamped = jnp.clip(pos_in_expert, 0, capacity - 1).astype(jnp.int32)
+
+    def _expert_mlp(xe):
+        h = jnp.einsum("necd,edf->necf", xe, _w(params, "w_in", x.dtype, arch_cfg, ("model", None, None)))
+        if "w_gate" in params:
+            g = jnp.einsum("necd,edf->necf", xe, _w(params, "w_gate", x.dtype, arch_cfg, ("model", None, None)))
+            h = h * (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g))
+        else:
+            h = activation(act, h)
+        return jnp.einsum("necf,efd->necd", h, _w(params, "w_out", x.dtype, arch_cfg, ("model", None, None)))
+
+    if gather_dispatch:
+        E, C, kk = cfg.n_experts, capacity, cfg.top_k
+        # slot id of each (token, choice): e*C + pos  (dropped -> dump slot)
+        keep_k = jnp.take_along_axis(keep, topi[..., None], axis=-1)[..., 0]  # [n,g,k]
+        pos_k = jnp.take_along_axis(pos_clamped, topi[..., None], axis=-1)[..., 0]
+        slot = topi * C + pos_k  # [n, g, k]
+        slot = jnp.where(keep_k, slot, E * C)  # dump slot
+        gidx = jnp.arange(n_groups)[:, None, None]
+        tok = jnp.broadcast_to(jnp.arange(gs)[None, :, None], slot.shape)
+        # slot -> token index table (+1 dump row), and slot validity
+        slot_tok = jnp.zeros((n_groups, E * C + 1), jnp.int32).at[gidx, slot].set(tok)
+        slot_ok = jnp.zeros((n_groups, E * C + 1), jnp.float32).at[gidx, slot].set(1.0)
+        # dispatch: pure gather (0 FLOPs)
+        xe = jnp.take_along_axis(xg, slot_tok[:, : E * C, None], axis=1)  # [n, E*C, d]
+        xe = xe * slot_ok[:, : E * C, None].astype(x.dtype)
+        xe = constrain(xe.reshape(n_groups, E, C, d), (None, "model", None, None))
+        ye = constrain(_expert_mlp(xe), (None, "model", None, None))
+        # combine: gather each (token, choice)'s expert output back
+        yf = ye.reshape(n_groups, E * C, d)
+        slot_g = jnp.minimum(slot, E * C - 1)  # dropped slots masked via w
+        picked = jnp.take_along_axis(
+            yf, slot_g.reshape(n_groups, gs * kk)[..., None], axis=1
+        ).reshape(n_groups, gs, kk, d)
+        w = (topv * keep_k.astype(jnp.float32)).astype(x.dtype)
+        y = jnp.einsum("ngk,ngkd->ngd", w, picked)
+    else:
+        # combine tensor [n, g, E, C] (classic GShard one-hot einsums)
+        cap_onehot = jax.nn.one_hot(pos_clamped, capacity, dtype=jnp.float32)  # [n,g,k,E,C]
+        combine = jnp.einsum(
+            "ngk,ngke,ngkec->ngec",
+            topv,
+            assign * keep.astype(jnp.float32),
+            cap_onehot,
+        )
+        dispatch = (combine > 0).astype(x.dtype)  # [n, g, E, C]
+        # dispatch -> expert batches [n, E, C, d]; the E-axis constraint is
+        # the expert-parallel all-to-all under the production mesh
+        xe = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+        xe = constrain(xe, (None, "model", None, None))
+        ye = constrain(_expert_mlp(xe), (None, "model", None, None))
+        y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
+    y = constrain(y, ("data", None, None))
+
+    y = y.reshape(n_groups * gs, d)[:G].reshape(B, S, d)
+    if cfg.n_shared and "shared" in params:
+        y = y + dense_ffn(params["shared"], x, act, cfg=arch_cfg)
+
+    # load-balance aux loss (Switch-style): mean prob * mean assignment
+    me = probs.mean(axis=(0, 1))  # [E]
+    ce = assign.sum(2).mean(axis=(0, 1))  # fraction routed per expert
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return y, {"moe_aux": aux}

@@ -1,0 +1,74 @@
+"""Model registry: ArchConfig -> Model (init / forward / prefill / decode).
+
+``Model`` is a thin namespace of pure functions so jit/pjit boundaries stay
+at the launcher level.  ``forward``/``prefill`` take ``extras`` — the
+modality-stub inputs (Whisper frame embeddings) — uniformly, so the
+launcher treats every arch identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decoder as dec
+from repro.models import encdec as ed
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]  # (params, tokens, extras) -> (logits, aux)
+    prefill: Callable[..., Any]  # (params, tokens, extras, pad_cache_to) -> (logits, cache)
+    decode: Callable[..., Any]  # (params, token, cache) -> (logits, cache)
+    init_cache: Callable[..., Any]  # (batch, max_len) -> cache
+
+    def extras_shapes(self, batch: int) -> dict:
+        """ShapeDtypeStruct-compatible spec of modality-stub inputs."""
+        if self.cfg.is_encdec:
+            return {
+                "frames": (
+                    (batch, self.cfg.encdec.n_frames, self.cfg.d_model),
+                    jnp.bfloat16,
+                )
+            }
+        return {}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        def forward(params, tokens, extras):
+            return ed.encdec_forward(params, tokens, extras["frames"], cfg)
+
+        def prefill(params, tokens, extras, pad_cache_to=None):
+            return ed.encdec_prefill(
+                params, tokens, extras["frames"], cfg, pad_cache_to=pad_cache_to
+            )
+
+        def decode(params, token, cache):
+            return ed.encdec_decode(params, token, cache, cfg)
+
+        def init_cache(batch, max_len):
+            return dec.init_cache(cfg, batch, max_len, enc_len=cfg.encdec.n_frames)
+
+        return Model(cfg, lambda key: ed.init_encdec(key, cfg), forward, prefill, decode, init_cache)
+
+    def forward(params, tokens, extras):
+        return dec.decoder_forward(params, tokens, cfg)
+
+    def prefill(params, tokens, extras, pad_cache_to=None):
+        return dec.decoder_prefill(params, tokens, cfg, pad_cache_to=pad_cache_to)
+
+    def decode(params, token, cache):
+        return dec.decoder_decode(params, token, cache, cfg)
+
+    def init_cache(batch, max_len):
+        return dec.init_cache(cfg, batch, max_len)
+
+    return Model(cfg, lambda key: dec.init_decoder(key, cfg), forward, prefill, decode, init_cache)

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Structure (recurrent block of the paper): two input branches —
+``gate = GeLU(W_g x)`` and ``h = conv1d(W_x x)`` fed to the RG-LRU —
+merged multiplicatively and projected out.  The RG-LRU recurrence:
+
+    r_t = σ(W_a' h_t)            (recurrence gate, block-diagonal)
+    i_t = σ(W_i' h_t)            (input gate, block-diagonal)
+    a_t = a^(c·r_t),  a = σ(Λ)   (per-channel learned decay, c = 8)
+    y_t = a_t ⊙ y_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ h_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth, TPU-friendly); decode is the O(1) per-token step — this plus
+the bounded local-attention window is why the hybrid family runs the
+``long_500k`` cell (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block_forward",
+    "rglru_block_decode",
+    "init_rglru_cache",
+]
+
+_C = 8.0
+
+
+def _n_blocks(cfg: ArchConfig) -> int:
+    return max(1, cfg.n_heads)
+
+
+def init_rglru_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    nb = _n_blocks(cfg)
+    bs = w // nb
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = σ(Λ) ∈ (0.9, 0.999) roughly (Griffin appendix)
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, 2.2, 6.9)
+    return {
+        "w_gate_in": dense_init(ks[0], (d, w)),
+        "w_x_in": dense_init(ks[1], (d, w)),
+        "conv_w": dense_init(ks[2], (4, w), scale=0.5),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        # block-diagonal gate projections [nb, bs, bs]
+        "w_a": dense_init(ks[3], (nb, bs, bs)),
+        "w_i": dense_init(ks[5], (nb, bs, bs)),
+        "lambda": lam,
+        "w_out": dense_init(ks[6], (w, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def _gates(params, h, nb: int):
+    """Block-diagonal gate projections.  h: [..., w] -> (r, i)."""
+    shp = h.shape
+    hb = h.reshape(*shp[:-1], nb, shp[-1] // nb)
+    r = jax.nn.sigmoid(
+        jnp.einsum("...nb,nbc->...nc", hb.astype(jnp.float32), params["w_a"])
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...nb,nbc->...nc", hb.astype(jnp.float32), params["w_i"])
+    )
+    return r.reshape(shp), i.reshape(shp)
+
+
+def _rglru_scan(params, h, nb: int, init_state=None):
+    """h: [B, S, w] -> (y [B, S, w] f32, final_state [B, w] f32)."""
+    r, i = _gates(params, h, nb)
+    log_a0 = jax.nn.log_sigmoid(params["lambda"])[None, None, :]  # log a
+    log_at = _C * r * log_a0  # [B, S, w], <= 0
+    at = jnp.exp(log_at)
+    beta = jnp.sqrt(jnp.maximum(1.0 - at * at, 1e-12))
+    xin = beta * i * h.astype(jnp.float32)
+    if init_state is not None:
+        xin = xin.at[:, 0, :].add(at[:, 0, :] * init_state)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = lax.associative_scan(combine, (at, xin), axis=1)
+    return y, y[:, -1, :]
+
+
+def rglru_block_forward(params, x, cfg: ArchConfig, init_state=None):
+    """x: [B, S, d] -> ([B, S, d], final_state [B, w])."""
+    nb = _n_blocks(cfg)
+    gate = jax.nn.gelu(x @ params["w_gate_in"].astype(x.dtype))
+    h = _causal_conv(x @ params["w_x_in"].astype(x.dtype), params["conv_w"], params["conv_b"])
+    y, state = _rglru_scan(params, h, nb, init_state)
+    out = (y.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return out, state
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = cfg.hybrid.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block_decode(params, x, cache, cfg: ArchConfig):
+    """One-token step.  x: [B, 1, d]."""
+    nb = _n_blocks(cfg)
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate_in"].astype(x.dtype))
+    hx = xt @ params["w_x_in"].astype(x.dtype)  # [B, w]
+    conv_in = jnp.concatenate([cache["conv"], hx[:, None, :]], axis=1)  # [B, 4, w]
+    w = params["conv_w"].astype(x.dtype)
+    h = jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"].astype(x.dtype)
+    r, i = _gates(params, h, nb)
+    log_a0 = jax.nn.log_sigmoid(params["lambda"])[None, :]
+    at = jnp.exp(_C * r * log_a0)
+    beta = jnp.sqrt(jnp.maximum(1.0 - at * at, 1e-12))
+    state = at * cache["state"] + beta * i * h.astype(jnp.float32)
+    out = (state.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return out[:, None, :], {"conv": conv_in[:, 1:, :], "state": state}

@@ -1,0 +1,191 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked dual form: within a chunk the quadratic
+"attention-like" branch, across chunks a linear state recurrence —
+``O(S·Q·P + S·N·P)`` FLOPs with chunk length ``Q``, never materialising the
+``S×S`` kernel.  Decode is the O(1)-state recurrent step, which is what
+makes the ``long_500k`` cell runnable for this family (DESIGN.md §5).
+
+Layout: heads ``H = d_inner / head_dim``; per head a scalar decay ``a_t =
+exp(Δt·A)``; shared single-group ``B, C ∈ [S, N]`` (Mamba-2 default
+n_groups=1).  The block follows the published structure: in_proj →
+short causal conv over (x, B, C) → SSD → gated RMSNorm → out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rmsnorm
+
+__all__ = ["init_ssd_block", "ssd_block_forward", "ssd_block_decode", "init_ssd_cache"]
+
+
+def init_ssd_block(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.d_state
+    ks = jax.random.split(key, 5)
+    lo, hi = s.a_init_range
+    a = jnp.exp(
+        jax.random.uniform(ks[3], (nh,), jnp.float32, jnp.log(lo), jnp.log(hi))
+    )
+    return {
+        # projections for [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * s.d_state + nh)),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W == 4: unrolled taps, XLA fuses
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+    return jax.nn.silu(out + b[None, None, :].astype(x.dtype))
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H]; A: [H] (negative); Bm, Cm: [B, S, N].
+    Returns y: [B, S, H, P].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:  # causal: end-padding with zero dt/B/x never leaks backwards
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
+        S = S + pad
+    nC = S // Q
+    # per-step log decay  l_t = dt_t * A  (<= 0)
+    lA = dt * A[None, None, :]  # [B, S, H]
+    xc = x.reshape(Bsz, nC, Q, H, P)
+    dtc = dt.reshape(Bsz, nC, Q, H)
+    lc = lA.reshape(Bsz, nC, Q, H)
+    Bc = Bm.reshape(Bsz, nC, Q, N)
+    Cc = Cm.reshape(Bsz, nC, Q, N)
+    cum = jnp.cumsum(lc, axis=2)  # [B, nC, Q, H] inclusive
+    total = cum[:, :, -1]  # [B, nC, H]
+
+    # ---- intra-chunk (quadratic within chunk) ---------------------------
+    # L[i, j] = exp(cum_i - cum_j) for i >= j  (decay from j+1..i).
+    # Mask the exponent BEFORE exp: above-diagonal diffs are large positive
+    # (cum is decreasing), exp overflows to inf, and `where(mask, inf, 0)`
+    # still back-propagates 0*inf = NaN through the discarded branch.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nC,Q(i),Q(j),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    Lmat = jnp.exp(diff)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [B,nC,Q,Q]
+    gated = scores[..., None] * Lmat  # [B,nC,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", gated, dtc, xc)
+
+    # ---- chunk states and inter-chunk recurrence ------------------------
+    # state_c = sum_j exp(total - cum_j) * dt_j * B_j ⊗ x_j
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc  # [B,nC,Q,H]
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w, Bc, xc)  # [B,nC,H,N,P]
+    decay_chunk = jnp.exp(total)  # [B, nC, H]
+
+    def scan_fn(h, inp):
+        s_c, d_c = inp  # [B,H,N,P], [B,H]
+        h_new = h * d_c[:, :, None, None] + s_c
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz, H, N, P), x.dtype)
+    _, h_prefix = lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay_chunk, 1, 0)),
+    )
+    h_prefix = jnp.moveaxis(h_prefix, 0, 1)  # [B, nC, H, N, P] state before chunk
+
+    # contribution of carried-in state: y += C_i · (exp(cum_i) * h_in)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc, h_prefix) * jnp.exp(cum)[..., None]
+    y = y_intra + y_inter + x.reshape(Bsz, nC, Q, H, P) * D[None, None, None, :, None]
+    y = y.reshape(Bsz, S, H, P)
+    return y[:, : S - pad] if pad else y
+
+
+def ssd_block_forward(params, x, cfg: ArchConfig):
+    """Full block: x [B, S, d] -> [B, S, d]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1
+    )
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xi, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])  # [H], negative
+    xh = xi.reshape(*xi.shape[:2], nh, s.head_dim)
+    y = _ssd_chunked(
+        xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        params["D"], s.chunk,
+    )
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def init_ssd_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+    }
+
+
+def ssd_block_decode(params, x, cache, cfg: ArchConfig):
+    """One-token step.  x: [B, 1, d]; returns (y [B, 1, d], new cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    proj = x[:, 0] @ params["in_proj"].astype(x.dtype)  # [B, ...]
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1
+    )
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)  # [B, conv_dim]
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B, W, C]
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = conv_in[:, 1:, :]
+    xi, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # [B, H]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])  # [B, H]
+    xh = xi.reshape(-1, nh, s.head_dim).astype(jnp.float32)
+    # h' = a h + dt * B ⊗ x ; y = C · h' + D x
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32), xh)
+    h_new = cache["state"] * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h_new)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    y = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    return y, {"conv": new_conv, "state": h_new}

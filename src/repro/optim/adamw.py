@@ -1,0 +1,111 @@
+"""AdamW + gradient clipping + LR schedules, from scratch (no optax).
+
+Optimizer state is a pytree congruent with params (``m``/``v`` per leaf),
+so the sharding rules that shard a parameter shard its moments identically
+— with FSDP-sharded params this is ZeRO-style optimizer-state sharding for
+free.  All moment math runs in fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm", "clip_by_global_norm", "make_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            frac = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            decay = 1.0 - frac
+        else:  # cosine
+            frac = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = make_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        pn = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        return pn.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

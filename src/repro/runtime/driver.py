@@ -1,0 +1,123 @@
+"""Fault-tolerant training driver: checkpoint/restart + straggler + elastic.
+
+The loop a real cluster job runs:
+
+    while budget:
+        state <- restore latest checkpoint (or init)
+        try:   step, step, ... (watchdog timing, periodic async snapshots)
+        except DeviceLoss: plan_remesh(survivors) -> restore into new mesh
+        except transient:  retry with backoff, restart from last snapshot
+
+Failure injection (``inject_failure``) lets the test suite exercise every
+path on CPU: mid-run exceptions lose at most ``save_every - 1`` steps,
+restarts are bit-deterministic (index-based data pipeline + checkpointed
+optimizer state), and straggler flags feed the mitigation counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.runtime.watchdog import StepWatchdog
+
+__all__ = ["DriverConfig", "TrainDriver", "DeviceLoss"]
+
+
+class DeviceLoss(RuntimeError):
+    """Raised (or injected) when participating devices disappear."""
+
+    def __init__(self, n_alive: int):
+        super().__init__(f"device loss: {n_alive} alive")
+        self.n_alive = n_alive
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    total_steps: int
+    save_every: int = 50
+    keep: int = 3
+    max_retries: int = 3
+    retry_backoff_s: float = 0.2
+    straggler_k_sigma: float = 4.0
+
+
+class TrainDriver:
+    def __init__(
+        self,
+        ckpt_dir: str,
+        cfg: DriverConfig,
+        *,
+        init_state: Callable[[], Any],
+        step_fn: Callable[[Any, dict], tuple[Any, dict]],
+        batch_fn: Callable[[int], dict],
+        on_remesh: Callable[[int], None] | None = None,
+        inject_failure: Callable[[int], None] | None = None,
+    ):
+        self.ckpt_dir = ckpt_dir
+        self.cfg = cfg
+        self.init_state = init_state
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.on_remesh = on_remesh
+        self.inject_failure = inject_failure
+        self.watchdog = StepWatchdog(k_sigma=cfg.straggler_k_sigma)
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep=cfg.keep)
+        self.events: list[str] = []
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _restore_or_init(self):
+        step = latest_step(self.ckpt_dir)
+        state = self.init_state()
+        if step is None:
+            self.events.append("init:fresh")
+            return state, 0
+        state, manifest = restore_checkpoint(self.ckpt_dir, state)
+        self.events.append(f"restore:step_{manifest['step']}")
+        return state, int(manifest["step"])
+
+    def run(self) -> tuple[Any, int]:
+        retries = 0
+        while True:
+            state, start = self._restore_or_init()
+            try:
+                state, done = self._run_from(state, start)
+                self.ckpt.wait()
+                return state, done
+            except DeviceLoss as e:
+                self.events.append(f"device_loss:{e.n_alive}")
+                self.ckpt.wait()
+                if self.on_remesh is not None:
+                    self.on_remesh(e.n_alive)
+                    self.events.append("remesh")
+                retries = 0  # re-meshed: reset transient budget
+            except Exception as e:  # noqa: BLE001 — transient failure path
+                retries += 1
+                self.events.append(f"retry{retries}:{type(e).__name__}")
+                if retries > self.cfg.max_retries:
+                    raise
+                self.ckpt.wait()
+                time.sleep(self.cfg.retry_backoff_s * retries)
+
+    def _run_from(self, state, start: int):
+        for step in range(start, self.cfg.total_steps):
+            if self.inject_failure is not None:
+                self.inject_failure(step)
+            batch = self.batch_fn(step)
+            self.watchdog.start()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(jax.tree.leaves(metrics)[0] if jax.tree.leaves(metrics) else state)
+            straggler = self.watchdog.stop()
+            if straggler:
+                self.events.append(f"straggler:step_{step}")
+            self.metrics_log.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
+            done = step + 1
+            if done % self.cfg.save_every == 0 or done == self.cfg.total_steps:
+                self.ckpt.save(done, state)
+                self.events.append(f"save:step_{done}")
+        return state, self.cfg.total_steps

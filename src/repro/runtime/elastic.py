@@ -1,0 +1,65 @@
+"""Elastic re-meshing after node loss.
+
+Policy: given the surviving device set, pick the largest mesh of shape
+``(data', model)`` such that ``model`` keeps the TP degree if possible
+(params re-shard cheaply along data) and the global batch still divides
+``data'``.  State migrates through the checkpoint path-addressed format —
+a restore into the new mesh's shardings is exactly the normal restart
+flow, so elasticity re-uses the fault-tolerance machinery instead of a
+bespoke resharding protocol (runtime/driver.py wires the two together).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["ElasticPlan", "plan_remesh", "build_remesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    n_used: int
+    n_alive: int
+    dropped_batch_rows: int  # if global batch had to shrink
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.data, self.model)
+
+
+def plan_remesh(
+    n_alive: int,
+    *,
+    prefer_model: int = 16,
+    global_batch: int = 256,
+    min_model: int = 1,
+) -> ElasticPlan:
+    """Largest usable (data, model) grid from ``n_alive`` devices."""
+    # TP degree is a *memory-fit requirement* (params are model-sharded), so
+    # keep it whenever possible and only halve when survivors can't fill a
+    # single model group; the batch, not the device count, absorbs the
+    # remainder (trimmed to a multiple of the data degree).
+    model = prefer_model
+    while model > min_model and n_alive < model:
+        model //= 2
+    data = max(n_alive // model, 1)
+    batch_kept = (global_batch // data) * data if data <= global_batch else global_batch
+    dropped = max(global_batch - batch_kept, 0)
+    return ElasticPlan(data, model, data * model, n_alive, dropped)
+
+
+def build_remesh(plan: ElasticPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = plan.data * plan.model
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    import numpy as np
+
+    arr = np.asarray(devices[:n]).reshape(plan.data, plan.model)
+    from jax.sharding import Mesh
+
+    return Mesh(arr, ("data", "model"))

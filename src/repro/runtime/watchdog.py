@@ -1,0 +1,95 @@
+"""Straggler / hang detection for the training driver.
+
+Two mechanisms sized for thousands-of-nodes operation:
+
+* ``StepWatchdog`` — streaming mean/variance of step times (Welford); a
+  step beyond ``mu + k*sigma`` (and an absolute floor) flags a straggler;
+  repeated flags trigger the driver's mitigation callback (re-shard /
+  restart — see runtime/driver.py).  Per-host, no coordination needed:
+  with SPMD every host sees the same collective-bound step time, so the
+  slowest participant is visible from anywhere.
+* ``HangTimer`` — a hard wall-clock deadline per step (lost-node case,
+  where the step never completes); fires a callback from a daemon thread.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+__all__ = ["StepWatchdog", "HangTimer"]
+
+
+class StepWatchdog:
+    def __init__(self, k_sigma: float = 4.0, min_steps: int = 8, abs_floor_s: float = 0.05):
+        self.k = k_sigma
+        self.min_steps = min_steps
+        self.abs_floor = abs_floor_s
+        self.n = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+        self.flags = 0
+        self._t0: float | None = None
+
+    # -- streaming stats ---------------------------------------------------
+    def _update(self, x: float) -> None:
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    @property
+    def sigma(self) -> float:
+        return (self.m2 / max(self.n - 1, 1)) ** 0.5
+
+    # -- step API ------------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record the step; returns True if it was a straggler step."""
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        is_straggler = (
+            self.n >= self.min_steps
+            and dt > max(self.mean + self.k * self.sigma, self.abs_floor)
+        )
+        # stragglers don't poison the baseline statistics
+        if not is_straggler:
+            self._update(dt)
+        else:
+            self.flags += 1
+        return is_straggler
+
+    def observe(self, dt: float) -> bool:
+        """Offline variant of start/stop for tests & simulations."""
+        is_straggler = (
+            self.n >= self.min_steps
+            and dt > max(self.mean + self.k * self.sigma, self.abs_floor)
+        )
+        if not is_straggler:
+            self._update(dt)
+        else:
+            self.flags += 1
+        return is_straggler
+
+
+class HangTimer:
+    """Hard per-step deadline; calls ``on_hang`` from a daemon thread."""
+
+    def __init__(self, deadline_s: float, on_hang):
+        self.deadline = deadline_s
+        self.on_hang = on_hang
+        self._timer: threading.Timer | None = None
+
+    def __enter__(self):
+        self._timer = threading.Timer(self.deadline, self.on_hang)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._timer is not None:
+            self._timer.cancel()
+        return False

@@ -1,0 +1,39 @@
+"""Cross-entropy loss over (possibly vocab-sharded) logits.
+
+Computed in fp32 with the max-shifted logsumexp; under the production mesh
+the vocab axis is sharded over ``'model'`` so the reductions lower to
+per-shard partials + a small all-reduce (visible in the collective
+roofline term).  ``z_loss`` stabilises the softmax normaliser at scale
+(PaLM-style) and is on by default with a tiny coefficient.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent"]
+
+
+def softmax_xent(logits, labels, *, z_loss_coeff: float = 1e-4, mask=None):
+    """logits: [B, S, V] (any float dtype); labels: [B, S] int32.
+
+    Returns (mean loss, metrics dict).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]  # [B, S]
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss_coeff * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = jnp.sum(per_tok * mask) / denom
+        acc_raw = (logits.argmax(-1) == labels) * mask
+        acc = acc_raw.sum() / denom
+    else:
+        loss = per_tok.mean()
+        acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"nll": (nll if mask is None else nll * mask).mean(), "accuracy": acc}

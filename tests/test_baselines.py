@@ -1,0 +1,91 @@
+"""Baseline algorithms (SIX / TPL / InfZone / SLICE) vs the exact oracle,
+plus R-tree substrate unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import STRTree, infzone_rknn, six_rknn, slice_rknn, tpl_rknn
+from repro.core.brute import rknn_brute_np
+
+
+def _instance(seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(15, 150))
+    N = int(rng.integers(100, 700))
+    k = int(rng.integers(1, 14))
+    F = rng.random((M, 2)) * 10
+    U = rng.random((N, 2)) * 10
+    qi = int(rng.integers(0, M))
+    return F, U, qi, k
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_six_matches_brute(seed):
+    F, U, qi, k = _instance(seed)
+    mask, info = six_rknn(F, U, qi, k)
+    np.testing.assert_array_equal(mask, rknn_brute_np(U, F, qi, k))
+    assert info["n_candidates"] >= mask.sum()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_tpl_matches_brute(seed):
+    F, U, qi, k = _instance(seed + 100)
+    mask, info = tpl_rknn(F, U, qi, k)
+    np.testing.assert_array_equal(mask, rknn_brute_np(U, F, qi, k))
+    assert info["n_bisectors"] <= len(F)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_infzone_matches_brute(seed):
+    F, U, qi, k = _instance(seed + 200)
+    mask, info = infzone_rknn(F, U, qi, k)
+    np.testing.assert_array_equal(mask, rknn_brute_np(U, F, qi, k))
+    # InfZone has no verification refinement: containment *is* the answer
+    assert info["n_kept"] <= len(F)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_slice_matches_brute(seed):
+    F, U, qi, k = _instance(seed + 300)
+    mask, info = slice_rknn(F, U, qi, k)
+    np.testing.assert_array_equal(mask, rknn_brute_np(U, F, qi, k))
+
+
+# ---- R-tree substrate ------------------------------------------------------
+
+def test_rtree_knn_matches_sort():
+    rng = np.random.default_rng(1)
+    pts = rng.random((500, 2))
+    tree = STRTree(pts)
+    p = np.array([0.5, 0.5])
+    got = [i for _, i in tree.knn(p, 10)]
+    want = np.argsort(np.linalg.norm(pts - p, axis=1))[:10]
+    assert set(got) == set(want.tolist())
+
+
+def test_rtree_nearest_iter_order():
+    rng = np.random.default_rng(2)
+    pts = rng.random((300, 2))
+    tree = STRTree(pts)
+    p = np.array([0.2, 0.8])
+    dists = [d for d, _ in tree.nearest_iter(p)]
+    assert all(dists[i] <= dists[i + 1] + 1e-12 for i in range(len(dists) - 1))
+    assert len(dists) == 300
+
+
+def test_rtree_count_within_strict():
+    rng = np.random.default_rng(3)
+    pts = rng.random((400, 2))
+    tree = STRTree(pts)
+    p = np.array([0.4, 0.4])
+    for r in (0.05, 0.2, 0.7):
+        want = int(np.sum(np.linalg.norm(pts - p, axis=1) < r))
+        assert tree.count_within_strict(p, r) == want
+    # exclusion
+    want = int(np.sum(np.linalg.norm(pts[1:] - pts[0], axis=1) < 0.3))
+    assert tree.count_within_strict(pts[0], 0.3, exclude=0) == want
+
+
+def test_rtree_build_time_recorded():
+    tree = STRTree(np.random.default_rng(0).random((1000, 2)))
+    assert tree.build_time > 0

@@ -1,0 +1,71 @@
+"""Paper future-work features: scene cache amortization + hybrid dispatch."""
+
+import numpy as np
+import pytest
+
+from repro.core.brute import rknn_brute_np
+from repro.core.hybrid import SceneCache, choose_engine, hybrid_rknn_query
+from repro.data.spatial import facility_user_split, road_network_points
+
+
+@pytest.fixture(scope="module")
+def city():
+    pts = road_network_points(30_000, seed=5)
+    return facility_user_split(pts, 500, seed=5)
+
+
+def test_scene_cache_hit_skips_construction(city):
+    F, U = city
+    cache = SceneCache(capacity=8)
+    r1 = hybrid_rknn_query(F, U, 7, 10, cache=cache, force="rt")
+    r2 = hybrid_rknn_query(F, U, 7, 10, cache=cache, force="rt")
+    assert cache.hits == 1 and cache.misses == 1
+    np.testing.assert_array_equal(r1.mask, r2.mask)
+    # cached filter phase is orders of magnitude cheaper
+    assert r2.t_filter_s < r1.t_filter_s / 5
+
+
+def test_scene_cache_lru_eviction(city):
+    F, U = city
+    cache = SceneCache(capacity=2)
+    for q in (1, 2, 3):  # 3 distinct scenes, capacity 2 -> q=1 evicted
+        hybrid_rknn_query(F, U[:100], q, 5, cache=cache, force="rt")
+    hybrid_rknn_query(F, U[:100], 1, 5, cache=cache, force="rt")
+    assert cache.misses == 4 and cache.hits == 0
+
+
+def test_cache_distinguishes_k_and_facility_set(city):
+    F, U = city
+    cache = SceneCache()
+    hybrid_rknn_query(F, U[:100], 1, 5, cache=cache, force="rt")
+    hybrid_rknn_query(F, U[:100], 1, 6, cache=cache, force="rt")  # different k
+    F2 = F.copy()
+    F2[0] += 0.01
+    hybrid_rknn_query(F2, U[:100], 1, 5, cache=cache, force="rt")  # different set
+    assert cache.misses == 3
+
+
+def test_hybrid_both_engines_exact(city):
+    F, U = city
+    truth = rknn_brute_np(U, F, 11, 8)
+    for force in ("rt", "slice"):
+        r = hybrid_rknn_query(F, U, 11, 8, force=force)
+        np.testing.assert_array_equal(r.mask, truth)
+        assert r.backend == ("dense-ref" if force == "rt" else "slice")
+
+
+def test_choose_engine_matches_measured_regimes():
+    # our measured frontier (bench_output.txt): sparse facilities + big k
+    # -> RT; dense facilities + small k -> SLICE; very large k -> RT even
+    # at default density (fig9 trend)
+    assert choose_engine(n_facilities=100, n_users=1_000_000, k=25) == "rt"
+    assert choose_engine(n_facilities=1_000, n_users=1_200_000, k=300) == "rt"
+    assert choose_engine(n_facilities=10_000, n_users=100_000, k=1) == "slice"
+    assert choose_engine(n_facilities=1_000, n_users=50_000, k=1) == "slice"
+
+
+def test_hybrid_auto_dispatch_is_exact(city):
+    F, U = city
+    truth = rknn_brute_np(U, F, 3, 10)
+    r = hybrid_rknn_query(F, U, 3, 10)
+    np.testing.assert_array_equal(r.mask, truth)

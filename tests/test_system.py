@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests for the whole system.
+
+These stitch the layers together the way the examples do: RkNN query →
+serving stream → fault-tolerant training run, each verified against ground
+truth rather than just "doesn't crash".
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import rt_rknn_query
+from repro.core.brute import rknn_brute_np
+from repro.data.spatial import facility_user_split, road_network_points
+from repro.launch.serve import RkNNServer
+from repro.launch.train import train_main
+
+
+@pytest.fixture(scope="module")
+def city():
+    pts = road_network_points(20_000, seed=11)
+    return facility_user_split(pts, 200, seed=11)
+
+
+def test_end_to_end_query_all_backends(city):
+    F, U = city
+    truth = rknn_brute_np(U, F, 17, 8)
+    for backend in ("dense", "dense-ref", "grid", "bvh", "brute"):
+        res = rt_rknn_query(F, U, 17, 8, backend=backend)
+        np.testing.assert_array_equal(res.mask, truth)
+
+
+def test_serving_stream_end_to_end(city):
+    F, U = city
+    server = RkNNServer(F, U)
+    rng = np.random.default_rng(0)
+    queries = rng.integers(0, len(F), 8)
+    batches = [queries[:4], queries[4:]]
+    seen = {}
+    for qb, masks in server.serve_stream(batches, k=5):
+        for qi, m in zip(qb, masks):
+            seen[int(qi)] = m
+    assert len(seen) == len(set(queries.tolist()))
+    for qi in list(seen)[:3]:
+        np.testing.assert_array_equal(seen[qi], rknn_brute_np(U, F, qi, 5))
+    assert server.stats.n_queries == 8
+
+
+def test_server_query_batch_matches_single_queries(city):
+    F, U = city
+    server = RkNNServer(F, U)
+    masks = server.query_batch([3, 9, 40], k=10)
+    for i, qi in enumerate([3, 9, 40]):
+        np.testing.assert_array_equal(masks[i], rknn_brute_np(U, F, qi, 10))
+
+
+def test_training_end_to_end_loss_decreases(tmp_path):
+    out = train_main(
+        "starcoder2_3b",
+        steps=30,
+        batch=4,
+        seq=64,
+        reduced=True,
+        reduced_overrides=dict(n_layers=2, d_model=64, vocab=256, head_dim=16),
+        ckpt_dir=str(tmp_path),
+        save_every=10,
+        lr=3e-3,
+    )
+    assert out["steps"] == 30
+    assert out["last_loss"] < out["first_loss"]
+    assert any(e.startswith("save:step_30") for e in out["events"])
