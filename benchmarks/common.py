@@ -17,7 +17,7 @@ import time
 import numpy as np
 
 from repro.core.baselines import STRTree, infzone_rknn, six_rknn, slice_rknn, tpl_rknn
-from repro.core.rknn import rt_rknn_query
+from repro.core.rknn import rt_rknn_query, rt_rknn_query_batch
 from repro.data.spatial import PAPER_DATASETS, facility_user_split, road_network_points
 
 DEFAULT_SCALE = 0.05
@@ -40,13 +40,30 @@ def timed(fn, *args, repeats: int = 1, **kw):
 
 
 def run_methods(F, U, q_indices, k, methods=("tpl", "inf", "slice", "rt"), tree=None):
-    """Mean runtime per query (s) for each method over ``q_indices``."""
+    """Mean runtime per query (s) for each method over ``q_indices``.
+
+    ``"rt-batch"`` dispatches the whole sweep as ONE
+    :func:`rt_rknn_query_batch` call (the amortized engine) instead of a
+    Python query loop; its per-query mean is directly comparable to
+    ``"rt"``.
+    """
     if tree is None and ("six" in methods or "tpl" in methods):
         tree = STRTree(F)
     acc = {m: 0.0 for m in methods}
     split = {m: [0.0, 0.0] for m in methods}
+    n = len(q_indices)
+    looped = [m for m in methods if m != "rt-batch"]
+    if "rt-batch" in methods:
+        qs = [int(q) for q in q_indices]
+        # warm the jit cache at this batch shape so the timed call measures
+        # steady-state dispatch, not compilation
+        rt_rknn_query_batch(F, U, qs, k, backend="dense-ref")
+        t0 = time.perf_counter()
+        rb = rt_rknn_query_batch(F, U, qs, k, backend="dense-ref")
+        acc["rt-batch"] = time.perf_counter() - t0
+        split["rt-batch"] = [rb.t_filter_s, rb.t_verify_s]
     for qi in q_indices:
-        for m in methods:
+        for m in looped:
             t0 = time.perf_counter()
             if m == "six":
                 _, info = six_rknn(F, U, qi, k, tree)
@@ -64,7 +81,6 @@ def run_methods(F, U, q_indices, k, methods=("tpl", "inf", "slice", "rt"), tree=
             acc[m] += time.perf_counter() - t0
             split[m][0] += info.get("t_filter_s", 0.0)
             split[m][1] += info.get("t_verify_s", 0.0)
-    n = len(q_indices)
     return (
         {m: v / n for m, v in acc.items()},
         {m: (a / n, b / n) for m, (a, b) in split.items()},

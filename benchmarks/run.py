@@ -27,6 +27,7 @@ BENCHES = [
     ("table3_fig16", bench_rknn.table3_fig16_occluders),
     ("fig17", bench_rknn.fig17_no_rt),
     ("backends", bench_rknn.backends_ablation),
+    ("batch", bench_rknn.batch_throughput),
     ("mono", bench_rknn.mono_queries),
 ]
 

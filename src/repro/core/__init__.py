@@ -2,13 +2,22 @@
 
 Public surface:
   * :func:`repro.core.rknn.rt_rknn_query` — one-call bichromatic RkNN
+  * :func:`repro.core.rknn.rt_rknn_query_batch` — batched multi-query
+    engine (one static-shape device dispatch per query batch)
   * :func:`repro.core.rknn.rknn_mono_query` — monochromatic variant
   * :mod:`repro.core.scene` — per-query occluder scene construction
   * :mod:`repro.core.baselines` — SIX / TPL / InfZone / SLICE comparators
 """
 
 from repro.core.geometry import Rect
-from repro.core.rknn import BACKENDS, RkNNResult, rknn_mono_query, rt_rknn_query
+from repro.core.rknn import (
+    BACKENDS,
+    RkNNBatchResult,
+    RkNNResult,
+    rknn_mono_query,
+    rt_rknn_query,
+    rt_rknn_query_batch,
+)
 from repro.core.scene import Scene, build_scene
 
 __all__ = [
@@ -16,7 +25,9 @@ __all__ = [
     "Scene",
     "build_scene",
     "rt_rknn_query",
+    "rt_rknn_query_batch",
     "rknn_mono_query",
     "RkNNResult",
+    "RkNNBatchResult",
     "BACKENDS",
 ]

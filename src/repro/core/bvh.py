@@ -28,7 +28,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["BVH", "build_bvh", "bvh_hit_counts", "MAX_STACK"]
+__all__ = [
+    "BVH",
+    "build_bvh",
+    "bvh_hit_counts",
+    "stack_bvhs",
+    "bvh_hit_counts_batch",
+    "MAX_STACK",
+]
 
 MAX_STACK = 64  # ample for median-split trees (depth == ceil(log2 M))
 
@@ -206,3 +213,63 @@ def bvh_hit_counts(
         return cnt
 
     return jax.vmap(one)(jnp.asarray(xs), jnp.asarray(ys))
+
+
+def stack_bvhs(
+    bvhs: list[BVH], coeffs_list: list[np.ndarray]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-query BVHs + triangle coefficients to static batch shapes.
+
+    Node arrays are right-padded to the max node count (padding nodes are
+    unreachable from the root, so their contents never matter); coefficient
+    tables are padded with degenerate never-inside rows.  Returns
+    ``(left [Q, Nn], right [Q, Nn], bbox [Q, Nn, 4], coeffs [Q, Mt, 3, 3])``.
+    """
+    if not bvhs:
+        raise ValueError("stack_bvhs needs at least one BVH")
+    Q = len(bvhs)
+    Nn = max(b.n_nodes for b in bvhs)
+    Mt = max(max(len(c), 1) for c in coeffs_list)
+    left = np.full((Q, Nn), -1, np.int32)
+    right = np.full((Q, Nn), -1, np.int32)
+    bbox = np.zeros((Q, Nn, 4), np.float32)
+    coeffs = np.zeros((Q, Mt, 3, 3), np.float32)
+    coeffs[:, :, :, 2] = -1.0  # degenerate default (never inside)
+    for i, (b, cf) in enumerate(zip(bvhs, coeffs_list)):
+        left[i, : b.n_nodes] = b.left
+        right[i, : b.n_nodes] = b.right
+        bbox[i, : b.n_nodes] = b.bbox
+        if len(cf):
+            coeffs[i, : len(cf)] = np.asarray(cf, np.float32)
+    return left, right, bbox, coeffs
+
+
+def bvh_hit_counts_batch(
+    xs,
+    ys,
+    left,
+    right,
+    bbox,
+    coeffs,
+    k: int | None = None,
+    max_stack: int = MAX_STACK,
+):
+    """Batched multi-query traversal: ``[Q, N]`` counts in one dispatch.
+
+    ``left/right``: ``[Q, Nn]``; ``bbox``: ``[Q, Nn, 4]``; ``coeffs``:
+    ``[Q, Mt, 3, 3]`` (from :func:`stack_bvhs`); users are shared across
+    queries.  Early termination at ``k`` applies per (query, user) lane.
+
+    An empty scene's BVH (what :func:`build_bvh` emits for ``M == 0``) is a
+    single leaf root referencing triangle 0, which :func:`stack_bvhs` pads
+    with a degenerate never-inside coefficient row — so it counts zero hits.
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+
+    def one(l, r, bb, cf):
+        return bvh_hit_counts(xs, ys, l, r, bb, cf, k=k, max_stack=max_stack)
+
+    return jax.vmap(one)(
+        jnp.asarray(left), jnp.asarray(right), jnp.asarray(bbox), jnp.asarray(coeffs)
+    )

@@ -28,11 +28,18 @@ import dataclasses
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.geometry import Rect
 
-__all__ = ["OccluderGrid", "build_grid", "grid_hit_counts_jnp"]
+__all__ = [
+    "OccluderGrid",
+    "build_grid",
+    "grid_hit_counts_jnp",
+    "stack_grids",
+    "grid_hit_counts_batch_jnp",
+]
 
 
 @dataclasses.dataclass
@@ -159,6 +166,68 @@ def build_grid(
         G=G,
         rect=rect,
     )
+
+
+def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-query grid indices to common static shapes for one batched
+    dispatch.
+
+    All grids must share ``G`` and ``rect`` (the serving setup: one domain,
+    many query scenes).  Candidate lists are right-padded with ``-1`` to the
+    max list length; triangle coefficient tables are padded with degenerate
+    never-inside rows so gathers on padded ids contribute nothing.  Returns
+    ``(base [Q, G*G] i32, lists [Q, G*G, L] i32, coeffs [Q, Mt, 3, 3] f32)``.
+    """
+    if not grids:
+        raise ValueError("stack_grids needs at least one grid")
+    G = grids[0].G
+    if any(g.G != G for g in grids):
+        raise ValueError("all grids in a batch must share G")
+    rect = grids[0].rect
+    if any(g.rect != rect for g in grids):
+        raise ValueError("all grids in a batch must share the domain rect")
+    L = max(g.lists.shape[1] for g in grids)
+    Mt = max(max(len(g.coeffs), 1) for g in grids)
+    Q = len(grids)
+    base = np.stack([g.base for g in grids]).astype(np.int32)
+    lists = np.full((Q, G * G, L), -1, np.int32)
+    coeffs = np.zeros((Q, Mt, 3, 3), np.float32)
+    coeffs[:, :, :, 2] = -1.0  # degenerate default (never inside)
+    for i, g in enumerate(grids):
+        lists[i, :, : g.lists.shape[1]] = g.lists
+        if len(g.coeffs):
+            coeffs[i, : len(g.coeffs)] = g.coeffs
+    return base, lists, coeffs
+
+
+def grid_hit_counts_batch_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
+    """Batched multi-query grid counting: ``[Q, N]`` counts in one dispatch.
+
+    ``base``: ``[Q, G*G]``; ``lists``: ``[Q, G*G, L]``; ``coeffs``:
+    ``[Q, Mt, 3, 3]`` (from :func:`stack_grids`).  The user→cell assignment
+    is shared across queries (one domain rect), so it is computed once and
+    the per-query work is a pure gather + edge-function evaluation.
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    base = jnp.asarray(base)
+    lists = jnp.asarray(lists)
+    coeffs = jnp.asarray(coeffs)
+    w = rect.width / G
+    h = rect.height / G
+    cx = jnp.clip(jnp.floor((xs - rect.xmin) / w), 0, G - 1).astype(jnp.int32)
+    cy = jnp.clip(jnp.floor((ys - rect.ymin) / h), 0, G - 1).astype(jnp.int32)
+    cell = cx * G + cy  # [N] shared across queries
+
+    def one(base_q, lists_q, coeffs_q):
+        cand = lists_q[cell]  # [N, L]
+        safe = jnp.maximum(cand, 0)
+        e = coeffs_q[safe]  # [N, L, 3, 3]
+        ev = e[..., 0] * xs[:, None, None] + e[..., 1] * ys[:, None, None] + e[..., 2]
+        inside = jnp.all(ev >= 0.0, axis=-1) & (cand >= 0)
+        return base_q[cell] + inside.sum(axis=-1).astype(jnp.int32)
+
+    return jax.vmap(one)(base, lists, coeffs)
 
 
 def grid_hit_counts_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):

@@ -1,4 +1,4 @@
-"""Public RT-RkNN query API (Algorithm 1 end-to-end).
+"""Public RT-RkNN query API (Algorithm 1 end-to-end), single and batched.
 
 Backends (all produce identical verdict sets — property-tested):
 
@@ -12,10 +12,24 @@ Backends (all produce identical verdict sets — property-tested):
 The scene-construction phase (host, numpy) matches paper Alg. 1 lines 1–8:
 InfZone-style pruning → occluder triangles → index build.  The ray-casting
 phase (device, JAX) is lines 9–24.
+
+Timing semantics (§4.1 / [62] two-stage convention): *filtering*
+(``t_filter_s``) covers everything on the host that prepares the query —
+pruning, occluder construction, padding, AND the grid/BVH index build;
+*verification* (``t_verify_s``) is only the device count dispatch.  (Before
+the batched engine landed, index build was mis-attributed to verification.)
+
+The batched engine (:func:`rt_rknn_query_batch`) amortizes per-query
+overheads the way RT-kNNS Unbound amortizes BVH builds across query
+batches: all ``Q`` scenes are built on the host (optionally via a thread
+pool), padded to one static ``Mp``, stacked to ``[Q, Mp, 3, 3]``, and
+counted in a single jitted batched dispatch per backend — one kernel
+launch / one index-gather sweep instead of ``Q`` Python-loop iterations.
 """
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
 
@@ -23,14 +37,25 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import brute as _brute
-from repro.core.bvh import build_bvh, bvh_hit_counts
+from repro.core.bvh import build_bvh, bvh_hit_counts, bvh_hit_counts_batch, stack_bvhs
 from repro.core.geometry import Rect
-from repro.core.grid import build_grid, grid_hit_counts_jnp
-from repro.core.scene import Scene, build_scene
+from repro.core.grid import (
+    build_grid,
+    grid_hit_counts_batch_jnp,
+    grid_hit_counts_jnp,
+    stack_grids,
+)
+from repro.core.scene import Scene, build_scene, pad_scene_arrays
 from repro.kernels import ops as _ops
 
-__all__ = ["RkNNResult", "rt_rknn_query", "rknn_mono_query", "BACKENDS"]
+__all__ = [
+    "RkNNResult",
+    "RkNNBatchResult",
+    "rt_rknn_query",
+    "rt_rknn_query_batch",
+    "rknn_mono_query",
+    "BACKENDS",
+]
 
 BACKENDS = ("dense", "dense-ref", "grid", "bvh", "brute")
 
@@ -40,8 +65,15 @@ class RkNNResult:
     """Query result + phase timings (paper's filtering/verification split).
 
     Following §4.1 we report the two-stage convention of [62]: *filtering*
-    = scene construction (pruning + occluders + index build), *verification*
-    = the ray-cast / count stage.
+    = scene construction (pruning + occluders + grid/BVH index build),
+    *verification* = the ray-cast / count stage only.
+
+    ``counts`` convention: for bichromatic queries these are raw occluder
+    hit counts (saturated at ``k`` for the bvh early-exit backend).  For
+    monochromatic queries (:func:`rknn_mono_query`) they are self-hit
+    corrected — ``counts[p]`` is the number of *other* points strictly
+    closer to ``p`` than ``q`` is, so ``mask == counts < k`` holds in both
+    cases.
     """
 
     mask: np.ndarray  # [N] bool — u ∈ RkNN(q)
@@ -56,9 +88,61 @@ class RkNNResult:
         return np.flatnonzero(self.mask)
 
 
+@dataclasses.dataclass
+class RkNNBatchResult:
+    """Batched multi-query result: per-query masks + amortized timings.
+
+    ``t_filter_s`` covers the whole batch's host work (scene builds,
+    padding/stacking, index builds); ``t_verify_s`` is the single batched
+    device dispatch.  Per-query attribution is therefore the mean:
+    ``t_filter_s / len(qs)`` etc.
+    """
+
+    masks: np.ndarray  # [Q, N] bool — u ∈ RkNN(q_i)
+    counts: np.ndarray  # [Q, N] int32 (saturated at k for bvh early-exit)
+    scenes: list[Scene] | None  # None for the brute backend
+    t_filter_s: float
+    t_verify_s: float
+    backend: str
+    k: int
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.masks)
+
+    def result_indices(self, i: int) -> np.ndarray:
+        return np.flatnonzero(self.masks[i])
+
+    def per_query(self, i: int) -> RkNNResult:
+        """View of query ``i`` with mean-amortized timings."""
+        q_n = max(self.n_queries, 1)
+        return RkNNResult(
+            mask=self.masks[i],
+            counts=self.counts[i],
+            scene=None if self.scenes is None else self.scenes[i],
+            t_filter_s=self.t_filter_s / q_n,
+            t_verify_s=self.t_verify_s / q_n,
+            backend=self.backend,
+        )
+
+
+def _build_index(scene: Scene, backend: str, grid_g: int):
+    """Host-side index build for the verification backend (filter phase)."""
+    if backend == "grid":
+        return build_grid(
+            scene.tris[: scene.n_tris], scene.coeffs[: scene.n_tris], scene.rect, G=grid_g
+        )
+    if backend == "bvh":
+        return build_bvh(scene.tris[: scene.n_tris])
+    return None
+
+
 def _verify_counts(
-    users: np.ndarray, scene: Scene, k: int, backend: str, grid_g: int
+    users: np.ndarray, scene: Scene, k: int, backend: str, grid_g: int, index=None
 ) -> np.ndarray:
+    """Device count stage.  ``index`` is the pre-built grid/BVH from
+    :func:`_build_index`; building it here would misattribute host index
+    construction to the verification phase."""
     xs = jnp.asarray(users[:, 0], jnp.float32)
     ys = jnp.asarray(users[:, 1], jnp.float32)
     if backend == "dense":
@@ -66,12 +150,12 @@ def _verify_counts(
     if backend == "dense-ref":
         return np.asarray(_ops.raycast_count(xs, ys, scene.coeffs, backend="ref"))
     if backend == "grid":
-        g = build_grid(scene.tris[: scene.n_tris], scene.coeffs[: scene.n_tris], scene.rect, G=grid_g)
+        g = index if index is not None else _build_index(scene, backend, grid_g)
         return np.asarray(
             grid_hit_counts_jnp(xs, ys, g.base, g.lists, g.coeffs, scene.rect, grid_g)
         )
     if backend == "bvh":
-        bvh = build_bvh(scene.tris[: scene.n_tris])
+        bvh = index if index is not None else _build_index(scene, backend, grid_g)
         return np.asarray(
             bvh_hit_counts(
                 xs,
@@ -129,10 +213,148 @@ def rt_rknn_query(
         pad_to=pad_to,
         users_hint=users,
     )
+    index = _build_index(scene, backend, grid_g)
     t1 = time.perf_counter()
-    counts = _verify_counts(users, scene, k, backend, grid_g)
+    counts = _verify_counts(users, scene, k, backend, grid_g, index=index)
     t2 = time.perf_counter()
     return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, backend)
+
+
+def _normalize_queries(
+    facilities: np.ndarray, qs
+) -> tuple[list[int | np.ndarray], np.ndarray, list[int | None]]:
+    """Split a query batch into per-query build args, points, and excludes."""
+    queries: list[int | np.ndarray] = []
+    q_pts = np.zeros((len(qs), 2), np.float64)
+    excludes: list[int | None] = []
+    for i, q in enumerate(qs):
+        arr = np.asarray(q)
+        if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
+            qi = int(arr)
+            queries.append(qi)
+            q_pts[i] = facilities[qi]
+            excludes.append(qi)
+        else:
+            pt = np.asarray(q, np.float64).reshape(2)
+            queries.append(pt)
+            q_pts[i] = pt
+            excludes.append(None)
+    return queries, q_pts, excludes
+
+
+def rt_rknn_query_batch(
+    facilities: np.ndarray,
+    users: np.ndarray,
+    qs,
+    k: int,
+    *,
+    backend: str = "dense-ref",
+    strategy: str = "infzone",
+    grid_g: int = 64,
+    prune_grid: int | None = None,
+    rect: Rect | None = None,
+    pad_to: int | None = None,
+    scene_workers: int = 0,
+) -> RkNNBatchResult:
+    """Batched bichromatic RkNN: all of ``qs`` against one shared user set.
+
+    ``qs`` is a sequence of facility indices and/or ``[2]`` points.  All
+    per-query scenes are built on the host (with ``scene_workers`` threads
+    when > 0), padded to one static ``Mp``, and counted in a **single**
+    jitted batched dispatch — the amortization that makes heavy query
+    traffic viable (ROADMAP north star; cf. RT-kNNS Unbound's batched BVH
+    reuse).  Masks are bit-identical to looping :func:`rt_rknn_query`
+    per query (equivalence-tested across all backends).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}")
+    facilities = np.asarray(facilities, dtype=np.float64)
+    users = np.asarray(users, dtype=np.float64)
+    qs = list(qs)
+    if not qs:
+        return RkNNBatchResult(
+            masks=np.zeros((0, len(users)), bool),
+            counts=np.zeros((0, len(users)), np.int32),
+            scenes=[],
+            t_filter_s=0.0,
+            t_verify_s=0.0,
+            backend=backend,
+            k=k,
+        )
+    queries, q_pts, excludes = _normalize_queries(facilities, qs)
+
+    if backend == "brute":
+        t0 = time.perf_counter()
+        counts = np.asarray(
+            _ops.rank_count_batch(users, facilities, q_pts, exclude=excludes)
+        )
+        t1 = time.perf_counter()
+        return RkNNBatchResult(
+            counts < k, counts, None, 0.0, t1 - t0, backend, k
+        )
+
+    # ---- filter phase: Q scene builds + padding/stacking + index builds ----
+    t0 = time.perf_counter()
+    if rect is None:
+        # one shared domain rect so scenes (and the grid cell map) align
+        rect = Rect.from_points(facilities, q_pts, users)
+
+    def _one_scene(q):
+        return build_scene(
+            facilities,
+            q,
+            k,
+            rect,
+            strategy=strategy,
+            grid=prune_grid,
+            users_hint=users,
+        )
+
+    if scene_workers > 0 and len(queries) > 1:
+        with concurrent.futures.ThreadPoolExecutor(scene_workers) as pool:
+            scenes = list(pool.map(_one_scene, queries))
+    else:
+        scenes = [_one_scene(q) for q in queries]
+
+    xs = jnp.asarray(users[:, 0], jnp.float32)
+    ys = jnp.asarray(users[:, 1], jnp.float32)
+
+    if backend in ("dense", "dense-ref"):
+        mp = pad_to if pad_to is not None else max(s.tris.shape[0] for s in scenes)
+        coeffs = np.stack(
+            [
+                pad_scene_arrays(
+                    s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], mp
+                )[1]
+                for s in scenes
+            ]
+        ).astype(np.float32)  # [Q, Mp, 3, 3]
+        t1 = time.perf_counter()
+        counts = np.asarray(
+            _ops.raycast_count_batch(
+                xs, ys, coeffs, backend="ref" if backend == "dense-ref" else "pallas"
+            )
+        )
+    elif backend == "grid":
+        grids = [_build_index(s, backend, grid_g) for s in scenes]
+        base, lists, gcoeffs = stack_grids(grids)
+        t1 = time.perf_counter()
+        counts = np.asarray(
+            grid_hit_counts_batch_jnp(xs, ys, base, lists, gcoeffs, rect, grid_g)
+        )
+    elif backend == "bvh":
+        bvhs = [_build_index(s, backend, grid_g) for s in scenes]
+        left, right, bbox, bcoeffs = stack_bvhs(
+            bvhs, [s.coeffs[: s.n_tris] for s in scenes]
+        )
+        t1 = time.perf_counter()
+        counts = np.asarray(
+            bvh_hit_counts_batch(xs, ys, left, right, bbox, bcoeffs, k=k)
+        )
+    else:  # pragma: no cover — BACKENDS guard above
+        raise ValueError(f"unknown backend {backend!r}")
+    t2 = time.perf_counter()
+    return RkNNBatchResult(counts < k, counts, scenes, t1 - t0, t2 - t1, backend, k)
 
 
 def rknn_mono_query(
@@ -158,11 +380,25 @@ def rknn_mono_query(
     argument aligned with the shifted threshold (a pruned own-occluder would
     already certify ``k + 1`` hits).  Validated against the mono brute
     oracle in ``tests/test_core_rknn.py``.
+
+    The returned ``counts`` are **self-hit corrected**: raw hit counts
+    include each point's own occluder, so one hit is subtracted for every
+    point except ``q`` itself (whose occluder is excluded from the scene).
+    ``counts[p]`` is therefore the number of *other* points strictly closer
+    to ``p`` than ``q``, and ``mask == counts < k`` (with row ``q_idx``
+    forced False).  For mask-True points this equals the mono brute rank
+    exactly; for pruned-out points the count is a saturated lower bound
+    ``>= k``.
     """
     points = np.asarray(points, dtype=np.float64)
     res = rt_rknn_query(
         points, points, q_idx, k + 1, backend=backend, strategy=strategy, rect=rect
     )
-    mask = res.mask.copy()
+    counts = np.asarray(res.counts, np.int32).copy()
+    # self-hit correction: every point except q hits its own occluder (q's
+    # occluder is excluded from the scene, so its count is already "others")
+    counts[np.arange(len(counts)) != q_idx] -= 1
+    np.maximum(counts, 0, out=counts)
+    mask = counts < k
     mask[q_idx] = False
-    return RkNNResult(mask, res.counts, res.scene, res.t_filter_s, res.t_verify_s, backend)
+    return RkNNResult(mask, counts, res.scene, res.t_filter_s, res.t_verify_s, backend)

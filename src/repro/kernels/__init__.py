@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
 
-* ``raycast``      — dense occluder hit counting (the ray-casting stage)
+* ``raycast``      — dense occluder hit counting (the ray-casting stage),
+                     single-query and batched (``[Q]`` grid axis) variants
 * ``rank_count``   — distance-rank counting (brute / "InfZone-GPU" baseline)
 * ``grid_raycast`` — grid-culled counting (the TPU BVH analogue)
-* ``ops``          — jit'd public wrappers (padding, backend selection)
+* ``ops``          — jit'd public wrappers (padding, backend selection,
+                     batched multi-query dispatch)
 * ``ref``          — pure-jnp oracles used by the allclose sweeps
 """
 
-from repro.kernels.ops import rank_count, raycast_count
+from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.ops import rank_count, raycast_count, raycast_count_batch
 
-__all__ = ["raycast_count", "rank_count"]
+__all__ = ["raycast_count", "rank_count", "raycast_count_batch", "tpu_compiler_params"]

@@ -1,0 +1,20 @@
+"""JAX version-compat helpers shared by every Pallas kernel module."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat constructor for Pallas TPU compiler params.
+
+    Newer JAX exposes ``pltpu.CompilerParams``; older releases (including
+    the pinned 0.4.x here) only have ``pltpu.TPUCompilerParams``.  All
+    kernel call sites go through this helper so the kernels load on both.
+    """
+    cls = getattr(_pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = _pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.grid import OccluderGrid
+from repro.kernels.compat import tpu_compiler_params
 
 __all__ = ["prepare_cell_buckets", "pack_cell_coeff_planes", "grid_raycast_cells"]
 
@@ -124,5 +125,6 @@ def grid_raycast_cells(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks * block,), jnp.int32),
+        compiler_params=tpu_compiler_params(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(cell_map, base, xs_sorted, ys_sorted, planes)

@@ -20,10 +20,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.raycast import raycast_count_kernel_call
+from repro.kernels.raycast import (
+    raycast_count_batch_kernel_call,
+    raycast_count_kernel_call,
+)
 from repro.kernels.rank_count import rank_count_kernel_call
 
-__all__ = ["raycast_count", "rank_count", "pallas_interpret_default"]
+__all__ = [
+    "raycast_count",
+    "raycast_count_batch",
+    "rank_count",
+    "rank_count_batch",
+    "pallas_interpret_default",
+]
 
 _USER_CHUNK = 32_768  # bounds the [chunk, M, 3] broadcast temp (~40 MB f32)
 
@@ -61,6 +70,31 @@ def _pad1(x: jnp.ndarray, mult: int, value: float) -> jnp.ndarray:
     return jnp.concatenate([x, jnp.full((p,), value, x.dtype)])
 
 
+def _effective_blocks(n: int, m: int, bu: int, bm: int) -> tuple[int, int]:
+    """Shrink tile sizes to the pow2 envelope of the problem.
+
+    Shared by the single-query and batched wrappers so their layouts can't
+    drift apart."""
+    bu_eff = min(bu, max(8, 1 << max(int(np.ceil(np.log2(max(n, 1)))), 3)))
+    bm_eff = min(bm, max(128, 1 << max(int(np.ceil(np.log2(max(m, 1)))), 7)))
+    return bu_eff, bm_eff
+
+
+def _coeff_planes(coeffs, bm_eff: int):
+    """``[..., M, 3, 3]`` coeffs → ``(A, B, C)`` ``[..., 3, Mp]`` planes,
+    lane-padded with never-inside rows (``a = b = 0, c = -1``)."""
+    A = jnp.swapaxes(coeffs[..., 0], -1, -2)
+    B = jnp.swapaxes(coeffs[..., 1], -1, -2)
+    C = jnp.swapaxes(coeffs[..., 2], -1, -2)
+    pm = (-A.shape[-1]) % bm_eff
+    if pm:
+        pad = A.shape[:-1] + (pm,)
+        A = jnp.concatenate([A, jnp.zeros(pad, A.dtype)], axis=-1)
+        B = jnp.concatenate([B, jnp.zeros(pad, B.dtype)], axis=-1)
+        C = jnp.concatenate([C, jnp.full(pad, -1.0, C.dtype)], axis=-1)
+    return A, B, C
+
+
 def raycast_count(
     xs,
     ys,
@@ -88,24 +122,59 @@ def raycast_count(
     if interpret is None:
         interpret = pallas_interpret_default()
     n = xs.shape[0]
-    m = coeffs.shape[0]
-    bu_eff = min(bu, max(8, 1 << max(int(np.ceil(np.log2(max(n, 1)))), 3)))
-    bm_eff = min(bm, max(128, 1 << max(int(np.ceil(np.log2(max(m, 1)))), 7)))
+    bu_eff, bm_eff = _effective_blocks(n, coeffs.shape[0], bu, bm)
     xs_p = _pad1(xs, bu_eff, 0.0)
     ys_p = _pad1(ys, bu_eff, 0.0)
-    # coeffs -> [3, M] planes, padded with never-inside rows (c = -1)
-    A = coeffs[:, :, 0].T
-    B = coeffs[:, :, 1].T
-    C = coeffs[:, :, 2].T
-    pm = (-m) % bm_eff
-    if pm:
-        A = jnp.concatenate([A, jnp.zeros((3, pm), A.dtype)], axis=1)
-        B = jnp.concatenate([B, jnp.zeros((3, pm), B.dtype)], axis=1)
-        C = jnp.concatenate([C, jnp.full((3, pm), -1.0, C.dtype)], axis=1)
+    A, B, C = _coeff_planes(coeffs, bm_eff)
     out = raycast_count_kernel_call(
         xs_p, ys_p, A, B, C, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
     )
     return out[:n]
+
+
+@jax.jit
+def _raycast_batch_ref_jit(xs, ys, coeffs):
+    return _ref.raycast_count_batch_ref(xs, ys, coeffs)
+
+
+def raycast_count_batch(
+    xs,
+    ys,
+    coeffs,
+    *,
+    backend: str = "pallas",
+    bu: int = 1024,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """Batched multi-query hit counts: one dispatch for a whole query batch.
+
+    ``xs, ys``: ``[N]`` shared users; ``coeffs``: ``[Q, Mp, 3, 3]`` stacked
+    per-query edge functions (padded degenerate — see
+    :func:`repro.core.scene.pad_scene_arrays`).  Returns ``[Q, N]`` int32.
+    ``backend="ref"`` runs the jitted vmap oracle (the fast CPU path);
+    ``backend="pallas"`` runs the ``[Q]``-grid-axis kernel.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    if coeffs.ndim != 4:
+        raise ValueError(f"coeffs must be [Q, Mp, 3, 3], got {coeffs.shape}")
+    if backend == "ref":
+        return _raycast_batch_ref_jit(xs, ys, coeffs)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    n = xs.shape[0]
+    bu_eff, bm_eff = _effective_blocks(n, coeffs.shape[1], bu, bm)
+    xs_p = _pad1(xs, bu_eff, 0.0)
+    ys_p = _pad1(ys, bu_eff, 0.0)
+    A, B, C = _coeff_planes(coeffs, bm_eff)
+    out = raycast_count_batch_kernel_call(
+        xs_p, ys_p, A, B, C, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
+    )
+    return out[:, :n]
 
 
 def rank_count(
@@ -141,9 +210,7 @@ def rank_count(
     if interpret is None:
         interpret = pallas_interpret_default()
     n = xs.shape[0]
-    m = fx.shape[0]
-    bu_eff = min(bu, max(8, 1 << max(int(np.ceil(np.log2(max(n, 1)))), 3)))
-    bm_eff = min(bm, max(128, 1 << max(int(np.ceil(np.log2(max(m, 1)))), 7)))
+    bu_eff, bm_eff = _effective_blocks(n, fx.shape[0], bu, bm)
     xs_p = _pad1(xs, bu_eff, 0.0)
     ys_p = _pad1(ys, bu_eff, 0.0)
     thr_p = _pad1(thr, bu_eff, 0.0)
@@ -153,3 +220,35 @@ def rank_count(
         xs_p, ys_p, fx_p, fy_p, thr_p, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
     )
     return out[:n]
+
+
+@jax.jit
+def _rank_batch_ref_jit(xs, ys, fx, fy, thr):
+    return _ref.rank_count_batch_ref(xs, ys, fx, fy, thr)
+
+
+def rank_count_batch(users, facilities, q_pts, *, exclude=None):
+    """Batched distance-rank counting: ``[Q, N]`` int32 in one dispatch.
+
+    ``users``: ``[N, 2]``; ``facilities``: ``[M, 2]``; ``q_pts``: ``[Q, 2]``
+    query points.  ``exclude`` is an optional length-``Q`` sequence of
+    facility rows to mask per query (``-1`` / ``None`` entries mask
+    nothing) — the batched analogue of :func:`rank_count`'s ``exclude``.
+    """
+    users = jnp.asarray(users, jnp.float32)
+    facilities = jnp.asarray(facilities, jnp.float32)
+    q_pts = jnp.asarray(q_pts, jnp.float32)
+    xs, ys = users[:, 0], users[:, 1]
+    q_n = q_pts.shape[0]
+    fx = jnp.broadcast_to(facilities[None, :, 0], (q_n, facilities.shape[0]))
+    fy = jnp.broadcast_to(facilities[None, :, 1], (q_n, facilities.shape[0]))
+    if exclude is not None:
+        excl = np.asarray(
+            [-1 if e is None else int(e) for e in exclude], dtype=np.int32
+        )
+        rows = np.flatnonzero(excl >= 0)
+        if len(rows):
+            fx = fx.at[rows, excl[rows]].set(jnp.inf)
+            fy = fy.at[rows, excl[rows]].set(jnp.inf)
+    thr = (xs[None, :] - q_pts[:, 0, None]) ** 2 + (ys[None, :] - q_pts[:, 1, None]) ** 2
+    return _rank_batch_ref_jit(xs, ys, fx, fy, thr)

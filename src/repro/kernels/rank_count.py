@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 __all__ = ["rank_count_kernel_call", "DEFAULT_BU", "DEFAULT_BM"]
 
@@ -67,7 +68,7 @@ def rank_count_kernel_call(
         ],
         out_specs=pl.BlockSpec((bu,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -14,6 +14,12 @@ containment-count:
   block, which is revisited across the ``M`` grid axis (accumulator
   pattern; zeroed at ``j == 0``).
 
+The batched variant (``raycast_count_batch_kernel_call``) prepends a
+``[Q]`` query axis to the grid: each program instance additionally selects
+one query's coefficient planes, so a whole multi-query batch is one kernel
+dispatch over shared user blocks — the serving hot path
+(``repro.core.rknn.rt_rknn_query_batch``).
+
 Early ray termination (Alg. 2 line 16) has no SIMD analogue; after
 InfZone-style pruning the scene is so small (``m`` ≈ 40–70) that the sweep
 is *user-read bound*, not test bound — see EXPERIMENTS.md §Perf-RkNN for
@@ -32,9 +38,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["raycast_count_kernel_call", "DEFAULT_BU", "DEFAULT_BM"]
+from repro.kernels.compat import tpu_compiler_params
+
+__all__ = [
+    "raycast_count_kernel_call",
+    "raycast_count_batch_kernel_call",
+    "DEFAULT_BU",
+    "DEFAULT_BM",
+]
 
 DEFAULT_BU = 1024  # users per block (8·128 sublane-aligned once reshaped)
 DEFAULT_BM = 512  # occluders per block (4 lanes of 128)
@@ -85,8 +97,65 @@ def raycast_count_kernel_call(
         ],
         out_specs=pl.BlockSpec((bu,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_p,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xs, ys, A, B, C)
+
+
+def _raycast_batch_kernel(x_ref, y_ref, a_ref, b_ref, c_ref, o_ref):
+    """One (query, user-block, occluder-block) tile of the batched count.
+
+    Identical math to :func:`_raycast_kernel`; the leading grid axis selects
+    the query's coefficient planes while the user blocks are shared across
+    all queries (the serving layout: one resident user set, many scenes).
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...][:, None]  # [BU, 1]
+    y = y_ref[...][:, None]
+    a = a_ref[0]  # [3, BM] — this query's coefficient planes
+    b = b_ref[0]
+    c = c_ref[0]
+    inside = (x * a[0][None, :] + y * b[0][None, :] + c[0][None, :]) >= 0.0
+    inside &= (x * a[1][None, :] + y * b[1][None, :] + c[1][None, :]) >= 0.0
+    inside &= (x * a[2][None, :] + y * b[2][None, :] + c[2][None, :]) >= 0.0
+    o_ref[...] += jnp.sum(inside, axis=1, dtype=jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bm", "interpret"))
+def raycast_count_batch_kernel_call(
+    xs, ys, A, B, C, *, bu: int = DEFAULT_BU, bm: int = DEFAULT_BM, interpret: bool = True
+):
+    """Batched multi-query invoke on pre-padded inputs.
+
+    ``xs, ys``: ``[Np]`` shared users (``Np % bu == 0``); ``A, B, C``:
+    ``[Q, 3, Mp]`` per-query edge-coefficient planes (``Mp % bm == 0``,
+    padding degenerate).  Returns ``[Q, Np]`` int32 counts — one kernel
+    dispatch for the whole query batch instead of ``Q`` separate launches.
+    """
+    n_p = xs.shape[0]
+    q_n, _, m_p = A.shape
+    grid = (q_n, n_p // bu, m_p // bm)
+    return pl.pallas_call(
+        _raycast_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bu,), lambda q, i, j: (i,)),
+            pl.BlockSpec((bu,), lambda q, i, j: (i,)),
+            pl.BlockSpec((1, 3, bm), lambda q, i, j: (q, 0, j)),
+            pl.BlockSpec((1, 3, bm), lambda q, i, j: (q, 0, j)),
+            pl.BlockSpec((1, 3, bm), lambda q, i, j: (q, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bu), lambda q, i, j: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((q_n, n_p), jnp.int32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(xs, ys, A, B, C)

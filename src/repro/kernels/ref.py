@@ -8,9 +8,16 @@ baseline.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["raycast_count_ref", "rank_count_ref", "grid_raycast_ref"]
+__all__ = [
+    "raycast_count_ref",
+    "raycast_count_batch_ref",
+    "rank_count_ref",
+    "rank_count_batch_ref",
+    "grid_raycast_ref",
+]
 
 
 def raycast_count_ref(xs, ys, coeffs):
@@ -30,6 +37,41 @@ def raycast_count_ref(xs, ys, coeffs):
     )  # [N, M, 3]
     inside = jnp.all(e >= 0.0, axis=-1)
     return inside.sum(axis=-1).astype(jnp.int32)
+
+
+def raycast_count_batch_ref(xs, ys, coeffs):
+    """Batched multi-query hit counting (oracle for the batched kernel).
+
+    ``xs, ys``: ``[N]`` shared user coordinates; ``coeffs``: ``[Q, Mp, 3, 3]``
+    stacked per-query edge functions (padded degenerate).  Returns ``[Q, N]``
+    int32 — semantically ``vmap(raycast_count_ref)`` over the query axis,
+    which is also exactly what ``launch/serve.py`` dispatches per batch.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+
+    def one(cf):
+        return raycast_count_ref(xs, ys, cf)
+
+    return jax.vmap(one)(coeffs)
+
+
+def rank_count_batch_ref(xs, ys, fx, fy, thr):
+    """Batched distance-rank counting: ``fx, fy``: ``[Q, M]`` per-query
+    facility coordinates (the query's own row pushed to +inf), ``thr``:
+    ``[Q, N]`` per-(query, user) squared distance thresholds.  Returns
+    ``[Q, N]`` int32."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    fx = jnp.asarray(fx, jnp.float32)
+    fy = jnp.asarray(fy, jnp.float32)
+    thr = jnp.asarray(thr, jnp.float32)
+    d2 = (
+        (xs[None, :, None] - fx[:, None, :]) ** 2
+        + (ys[None, :, None] - fy[:, None, :]) ** 2
+    )  # [Q, N, M]
+    return (d2 < thr[:, :, None]).sum(axis=-1).astype(jnp.int32)
 
 
 def rank_count_ref(xs, ys, fx, fy, thr):

@@ -29,25 +29,22 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.geometry import Rect
-from repro.core.scene import build_scene
+from repro.core.scene import build_scene, pad_scene_arrays
 from repro.distributed.meshctx import dp_axes
+from repro.kernels.ref import raycast_count_batch_ref
 
 __all__ = ["RkNNServer", "batched_raycast_counts", "lower_rknn_serve"]
 
 
 def batched_raycast_counts(xs, ys, coeffs):
-    """counts[q, u] for stacked scenes.  xs/ys: [N]; coeffs: [Q, M, 3, 3]."""
+    """counts[q, u] for stacked scenes.  xs/ys: [N]; coeffs: [Q, M, 3, 3].
 
-    def one(cf):
-        e = (
-            cf[None, :, :, 0] * xs[:, None, None]
-            + cf[None, :, :, 1] * ys[:, None, None]
-            + cf[None, :, :, 2]
-        )
-        inside = jnp.all(e >= 0.0, axis=-1)
-        return inside.sum(axis=-1).astype(jnp.int32)  # [N]
-
-    return jax.vmap(one)(coeffs)  # [Q, N]
+    Delegates to the shared batched oracle in :mod:`repro.kernels.ref` —
+    the same math :func:`repro.core.rknn.rt_rknn_query_batch` dispatches,
+    so the serving path and the query engine cannot drift apart.  Kept as a
+    named function because the server jits it with mesh shardings.
+    """
+    return raycast_count_batch_ref(xs, ys, coeffs)
 
 
 @dataclasses.dataclass
@@ -126,8 +123,6 @@ class RkNNServer:
         mmax = max(s.n_tris for s in scenes)
         if mmax > self.pad:  # grow the static pad (rare; re-jit once)
             self.pad = 1 << int(np.ceil(np.log2(mmax)))
-        from repro.core.scene import pad_scene_arrays
-
         coeffs = np.stack(
             [pad_scene_arrays(s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], self.pad)[1] for s in scenes]
         )  # [Q, pad, 3, 3]

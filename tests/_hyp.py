@@ -1,0 +1,120 @@
+"""Minimal vendored stand-in for ``hypothesis`` (tier-1 environments only).
+
+The build container cannot install ``hypothesis``, but the property tests
+in ``test_geometry.py`` / ``test_core_rknn.py`` only use a small surface:
+``@given`` over ``integers``/``floats``/``@composite`` strategies plus
+``@settings(max_examples=..., deadline=...)``.  This shim replays each
+property over a deterministic seed sweep (a fixed PRNG stream derived from
+the test name), which keeps the properties exercised — just without
+shrinking or example databases.  Import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # tier-1 fallback
+        from tests._hyp import given, settings, strategies as st
+
+When the real ``hypothesis`` is available it wins, unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 25
+# Cap the deterministic sweep: the shim has no shrinking/coverage feedback,
+# so very large max_examples just re-rolls the same PRNG stream — bound it
+# to keep tier-1 runtime low while still sweeping a real distribution.
+_MAX_EXAMPLES_CAP = 50
+
+
+class SearchStrategy:
+    """A strategy is just a function ``rng -> value`` here."""
+
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+
+def _integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(
+    min_value: float,
+    max_value: float,
+    *,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> SearchStrategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _composite(fn):
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+
+        return SearchStrategy(draw_value)
+
+    return factory
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, composite=_composite
+)
+
+
+def settings(*, max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Records the example budget on the test function (deadline ignored)."""
+
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    """Replays the property over a deterministic per-test seed sweep."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            n = min(int(n), _MAX_EXAMPLES_CAP)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for example in range(n):
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{example} (shim seed {seed}): "
+                        f"{drawn!r}\n{e}"
+                    ) from e
+
+        # pytest must not see the strategy-filled parameters as fixtures
+        # (real hypothesis also strips them from the exposed signature);
+        # strategies fill the trailing params, fixtures keep the leading ones
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[: len(params) - len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,102 @@
+"""Batch-vs-loop equivalence for the batched multi-query RkNN engine.
+
+``rt_rknn_query_batch`` must produce bit-identical masks to looping
+``rt_rknn_query`` per query, on every backend — including at distance
+ties, where the float32 ``>= 0`` edge-function convention decides
+membership and both paths must decide it the same way.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.brute import rknn_brute_np
+from repro.core.rknn import BACKENDS, rt_rknn_query, rt_rknn_query_batch
+
+
+def _instance(seed, M=50, N=300):
+    rng = np.random.default_rng(seed)
+    return rng.random((M, 2)), rng.random((N, 2)), rng
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed,k", [(0, 1), (1, 4), (2, 9)])
+def test_batch_matches_loop(backend, seed, k):
+    F, U, rng = _instance(seed)
+    qs = [int(q) for q in rng.integers(0, len(F), 6)]
+    batch = rt_rknn_query_batch(F, U, qs, k, backend=backend)
+    assert batch.masks.shape == (len(qs), len(U))
+    assert batch.counts.shape == (len(qs), len(U))
+    for i, qi in enumerate(qs):
+        single = rt_rknn_query(F, U, qi, k, backend=backend)
+        np.testing.assert_array_equal(batch.masks[i], single.mask)
+        np.testing.assert_array_equal(batch.masks[i], rknn_brute_np(U, F, qi, k))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_mixed_index_and_point_queries(backend):
+    F, U, rng = _instance(7)
+    qs = [3, np.array([0.25, 0.75]), 11, np.array([0.6, 0.4])]
+    batch = rt_rknn_query_batch(F, U, qs, 5, backend=backend)
+    for i, q in enumerate(qs):
+        single = rt_rknn_query(F, U, q, 5, backend=backend)
+        np.testing.assert_array_equal(batch.masks[i], single.mask)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_boundary_tie(backend):
+    """User exactly equidistant to q and a competitor (coordinates exactly
+    representable in float32), pinning the ``>= 0`` edge-function tie
+    semantics: whatever a backend decides, batch and loop must agree."""
+    F = np.array([[0.25, 0.5], [0.75, 0.5], [0.125, 0.875], [0.875, 0.125]])
+    # U[0] is on the q=F[0] / F[1] bisector (x = 0.5); U[3] strictly inside
+    # F[1]'s half-plane; others well away from any bisector
+    U = np.array([[0.5, 0.5], [0.5, 0.25], [0.25, 0.25], [0.625, 0.5]])
+    for k in (1, 2):
+        batch = rt_rknn_query_batch(F, U, [0, 1], k, backend=backend)
+        for i, qi in enumerate([0, 1]):
+            single = rt_rknn_query(F, U, qi, k, backend=backend)
+            np.testing.assert_array_equal(batch.masks[i], single.mask)
+
+
+def test_batch_tie_dense_matches_ref():
+    """The Pallas kernel and the jnp oracle share one f32 tie convention."""
+    F = np.array([[0.25, 0.5], [0.75, 0.5], [0.125, 0.875]])
+    U = np.array([[0.5, 0.5], [0.5, 0.75], [0.375, 0.5]])
+    a = rt_rknn_query_batch(F, U, [0, 1, 2], 1, backend="dense")
+    b = rt_rknn_query_batch(F, U, [0, 1, 2], 1, backend="dense-ref")
+    np.testing.assert_array_equal(a.counts, b.counts)
+    np.testing.assert_array_equal(a.masks, b.masks)
+
+
+def test_batch_empty_and_edge_cases():
+    F, U, rng = _instance(13, M=20)
+    empty = rt_rknn_query_batch(F, U, [], 3)
+    assert empty.masks.shape == (0, len(U)) and empty.n_queries == 0
+    # k >= |F| accepts every user for every query
+    big = rt_rknn_query_batch(F, U, [0, 5], len(F) + 3)
+    assert big.masks.all()
+    # singleton batch equals the single-query API
+    one = rt_rknn_query_batch(F, U, [4], 2)
+    single = rt_rknn_query(F, U, 4, 2)
+    np.testing.assert_array_equal(one.masks[0], single.mask)
+    np.testing.assert_array_equal(one.per_query(0).mask, single.mask)
+
+
+def test_batch_scene_workers_deterministic():
+    """Thread-pooled scene builds change timing, never results."""
+    F, U, rng = _instance(21)
+    qs = [int(q) for q in rng.integers(0, len(F), 8)]
+    serial = rt_rknn_query_batch(F, U, qs, 5, scene_workers=0)
+    pooled = rt_rknn_query_batch(F, U, qs, 5, scene_workers=4)
+    np.testing.assert_array_equal(serial.masks, pooled.masks)
+    np.testing.assert_array_equal(serial.counts, pooled.counts)
+
+
+def test_batch_timing_attribution():
+    """Index build belongs to the filter phase, not verification."""
+    F, U, rng = _instance(31, M=120, N=800)
+    qs = [int(q) for q in rng.integers(0, len(F), 4)]
+    res = rt_rknn_query_batch(F, U, qs, 5, backend="grid")
+    assert res.t_filter_s > 0.0 and res.t_verify_s > 0.0
+    single = rt_rknn_query(F, U, qs[0], 5, backend="grid")
+    assert single.t_filter_s > 0.0 and single.t_verify_s > 0.0

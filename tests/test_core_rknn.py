@@ -10,7 +10,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 environment: replay over a fixed seed sweep
+    from tests._hyp import given, settings, strategies as st
 
 from repro.core.brute import rknn_brute_np, rknn_mono_brute_np
 from repro.core.bvh import build_bvh, bvh_hit_counts
@@ -111,6 +115,32 @@ def test_monochromatic(backend):
         k = int(rng.integers(1, 6))
         res = rknn_mono_query(P, qi, k, backend=backend)
         np.testing.assert_array_equal(res.mask, rknn_mono_brute_np(P, qi, k))
+
+
+@pytest.mark.parametrize("backend", ["dense-ref", "grid", "bvh"])
+def test_mono_counts_self_hit_corrected(backend):
+    """Regression for the mono off-by-one: ``counts`` must be self-hit
+    corrected (number of OTHER points strictly closer than q), so that
+    ``mask == counts < k`` and ``counts[mask]`` equal the mono brute ranks
+    exactly (outside the mask they may sit at a saturated lower bound)."""
+    rng = np.random.default_rng(21)
+    P = rng.random((60, 2))
+    qi, k = 5, 4
+    res = rknn_mono_query(P, qi, k, backend=backend)
+    # brute rank oracle: #others strictly closer to p than q is (a != p, q)
+    q = P[qi]
+    d2q = np.sum((P - q) ** 2, axis=1)
+    d2 = np.sum((P[:, None, :] - P[None, :, :]) ** 2, axis=-1)
+    closer = d2 < d2q[:, None]
+    np.fill_diagonal(closer, False)
+    closer[:, qi] = False
+    want = closer.sum(axis=1)
+    np.testing.assert_array_equal(res.mask, rknn_mono_brute_np(P, qi, k))
+    np.testing.assert_array_equal(res.counts[res.mask], want[res.mask])
+    mask_from_counts = res.counts < k
+    mask_from_counts[qi] = False
+    np.testing.assert_array_equal(res.mask, mask_from_counts)
+    assert np.all(res.counts[~res.mask] >= 0)  # never negative after correction
 
 
 def test_query_point_not_in_facility_set():

@@ -108,6 +108,7 @@ _DRYRUN_8DEV = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["starcoder2_3b", "deepseek_moe_16b", "mamba2_130m"])
 def test_dryrun_8dev_subprocess(arch):
     """Reduced-config train_step lowers + compiles on an 8-device mesh and

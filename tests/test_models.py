@@ -21,7 +21,9 @@ from repro.models.registry import build_model
 from repro.optim.adamw import AdamWConfig
 from repro.steps.train import init_train_state, make_decode_step, make_prefill_step, make_train_step
 
-B, S = 2, 64
+# smoke-test sizes: S=32 exercises every cache/scan path the reduced
+# configs have while keeping the 8-arch sweep well inside the tier-1 budget
+B, S = 2, 32
 OPT = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
 
 

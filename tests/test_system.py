@@ -53,6 +53,7 @@ def test_server_query_batch_matches_single_queries(city):
         np.testing.assert_array_equal(masks[i], rknn_brute_np(U, F, qi, 10))
 
 
+@pytest.mark.slow
 def test_training_end_to_end_loss_decreases(tmp_path):
     out = train_main(
         "starcoder2_3b",
