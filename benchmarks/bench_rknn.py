@@ -16,6 +16,7 @@ import jax
 from benchmarks.common import DEFAULT_SCALE, dataset, run_methods, timed
 from repro.core.baselines import STRTree, infzone_rknn
 from repro.core.bvh import build_bvh, bvh_hit_counts
+from repro.core.engine import RkNNConfig, RkNNEngine
 from repro.core.geometry import Rect
 from repro.core.grid import build_grid, grid_hit_counts_jnp
 from repro.core.rknn import rt_rknn_query, rt_rknn_query_batch
@@ -318,6 +319,57 @@ def batch_throughput(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[d
                     ),
                 )
             )
+    return rows
+
+
+# --------------------------------------- stateful engine amortization (ours)
+def engine_amortization(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+    """Repeated-workload amortization: the stateful engine vs cold shims.
+
+    The serving regime the paper motivates (hot facilities queried over and
+    over): the same ``Q``-query workload dispatched twice.  A cold
+    ``rt_rknn_query_batch`` call rebuilds every scene both times; the
+    engine's scene cache + prepared-batch LRU collapse the second call's
+    host filter phase to a dictionary lookup.  Masks are asserted
+    bit-identical; the engine must win on dense-ref and grid (acceptance
+    criterion of the engine PR — emitted via ``--json`` for trajectory
+    tracking).
+    """
+    F, U = _fu("NY", 1000, scale)
+    rng = np.random.default_rng(11)
+    q_n = n_queries or 16
+    qs = [int(q) for q in rng.integers(0, len(F), q_n)]
+    rows = []
+    for backend in ("dense-ref", "grid"):
+        # warm the global jit caches at this batch shape so both paths time
+        # steady-state host work + dispatch, not XLA compilation
+        rt_rknn_query_batch(F, U, qs, 10, backend=backend)
+        t0 = time.perf_counter()
+        cold1 = rt_rknn_query_batch(F, U, qs, 10, backend=backend)
+        cold2 = rt_rknn_query_batch(F, U, qs, 10, backend=backend)
+        t_cold = time.perf_counter() - t0
+        eng = RkNNEngine(F, U, RkNNConfig(backend=backend))
+        t0 = time.perf_counter()
+        warm1 = eng.query_batch(qs, 10)
+        warm2 = eng.query_batch(qs, 10)
+        t_eng = time.perf_counter() - t0
+        assert np.array_equal(warm1.masks, cold1.masks)
+        assert np.array_equal(warm2.masks, cold2.masks)
+        assert eng.stats.batch_cache_hits >= 1
+        # the win (speedup > 1) is reported, not asserted — a scheduler
+        # hiccup on a loaded CI box must not erase the trajectory row
+        rows.append(
+            dict(
+                name=f"engine_repeat_Q{q_n}_{backend}",
+                us_per_call=t_eng / (2 * q_n) * 1e6,
+                derived=(
+                    f"cold2x={t_cold*1e3:.1f}ms engine2x={t_eng*1e3:.1f}ms "
+                    f"speedup={t_cold/t_eng:.2f}x win={t_eng < t_cold} "
+                    f"hot_filter={warm2.t_filter_s*1e3:.2f}ms "
+                    f"cold_filter={cold2.t_filter_s*1e3:.2f}ms"
+                ),
+            )
+        )
     return rows
 
 

@@ -1,15 +1,21 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig9]
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig9] \
+        [--json out.json]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measured artefact).
 ``--scale 1.0`` reproduces the paper's dataset cardinalities (minutes to
 hours on CPU); the default keeps CI fast while preserving every comparison.
+``--json`` additionally writes the rows as machine-readable JSON
+(``{"meta": {...}, "rows": [...]}``) so CI and future PRs can append
+trajectory points (``BENCH_*.json``) without re-parsing CSV.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -28,6 +34,7 @@ BENCHES = [
     ("fig17", bench_rknn.fig17_no_rt),
     ("backends", bench_rknn.backends_ablation),
     ("batch", bench_rknn.batch_throughput),
+    ("engine", bench_rknn.engine_amortization),
     ("mono", bench_rknn.mono_queries),
 ]
 
@@ -36,10 +43,18 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=float, default=DEFAULT_SCALE)
     ap.add_argument("--only", default=None, help="substring filter on bench name")
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="OUT",
+        help="also write rows as machine-readable JSON to this path",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
+    all_rows: list[dict] = []
+    errors: list[dict] = []
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -47,11 +62,37 @@ def main() -> None:
             rows = fn(scale=args.scale)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}_ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+            errors.append(dict(bench=name, error=f"{type(e).__name__}: {e}"))
             continue
         for r in rows:
             derived = str(r.get("derived", "")).replace(",", ";")
             print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
-    print(f"# total wall: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+            all_rows.append(
+                dict(
+                    bench=name,
+                    name=r["name"],
+                    us_per_call=float(r["us_per_call"]),
+                    derived=str(r.get("derived", "")),
+                )
+            )
+    wall = time.perf_counter() - t0
+    if args.json:
+        payload = dict(
+            meta=dict(
+                scale=args.scale,
+                only=args.only,
+                wall_s=round(wall, 3),
+                python=platform.python_version(),
+                platform=platform.platform(),
+            ),
+            rows=all_rows,
+            errors=errors,
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
+    print(f"# total wall: {wall:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

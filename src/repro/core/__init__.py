@@ -1,14 +1,25 @@
 """RT-RkNN core: the paper's contribution as a composable JAX module.
 
 Public surface:
-  * :func:`repro.core.rknn.rt_rknn_query` — one-call bichromatic RkNN
-  * :func:`repro.core.rknn.rt_rknn_query_batch` — batched multi-query
-    engine (one static-shape device dispatch per query batch)
+  * :class:`repro.core.engine.RkNNEngine` — stateful query engine (build
+    once from ``(facilities, users, RkNNConfig)``; query/batch/mono/stream)
+  * :mod:`repro.core.backends` — pluggable verification backend registry
+  * :func:`repro.core.rknn.rt_rknn_query` — one-shot bichromatic RkNN shim
+  * :func:`repro.core.rknn.rt_rknn_query_batch` — one-shot batched shim
   * :func:`repro.core.rknn.rknn_mono_query` — monochromatic variant
   * :mod:`repro.core.scene` — per-query occluder scene construction
   * :mod:`repro.core.baselines` — SIX / TPL / InfZone / SLICE comparators
+
+Lifecycle, config knobs, and the free-function migration table: docs/API.md.
 """
 
+from repro.core.backends import (
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.core.engine import EngineStats, RkNNConfig, RkNNEngine
 from repro.core.geometry import Rect
 from repro.core.rknn import (
     BACKENDS,
@@ -24,6 +35,13 @@ __all__ = [
     "Rect",
     "Scene",
     "build_scene",
+    "RkNNEngine",
+    "RkNNConfig",
+    "EngineStats",
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
     "rt_rknn_query",
     "rt_rknn_query_batch",
     "rknn_mono_query",

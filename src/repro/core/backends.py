@@ -1,0 +1,319 @@
+"""Pluggable verification backends behind one registry.
+
+Before this module existed, every query path in :mod:`repro.core.rknn`
+carried its own if/elif ladder over the backend name — three copies
+(`_build_index`, `_verify_counts`, and the batched dispatch) that each new
+backend (the planned Pallas grid-batch kernel, hybrid auto-selection) would
+have had to thread through.  Now a backend is ONE class implementing
+
+* :meth:`Backend.build_index`    — host-side index build (filter phase),
+* :meth:`Backend.count`          — single-query device count (verify phase),
+* :meth:`Backend.prepare_batch`  — host-side batch stacking (filter phase),
+* :meth:`Backend.count_batch`    — one batched device dispatch (verify phase),
+
+registered with :func:`register_backend` and resolved with
+:func:`get_backend`.  The split between ``prepare_batch`` and
+``count_batch`` exists so callers can keep the paper's two-stage timing
+convention honest: everything host-side lands in ``t_filter_s``, only the
+device dispatch in ``t_verify_s``.
+
+Built-in backends (all produce identical verdict sets — property-tested):
+
+* ``"dense"``    — Pallas ray-cast kernel (interpret mode on CPU), the
+                   TPU-native execution of the paper's ray-casting stage.
+* ``"dense-ref"``— pure-jnp oracle (fast on CPU; same math).
+* ``"grid"``     — uniform-grid culled counting (TPU BVH analogue).
+* ``"bvh"``      — paper-faithful LBVH traversal with early termination.
+* ``"brute"``    — exact distance-rank counting (no geometry; baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.bvh import build_bvh, bvh_hit_counts, bvh_hit_counts_batch, stack_bvhs
+from repro.core.geometry import Rect
+from repro.core.grid import (
+    build_grid,
+    grid_hit_counts_batch_jnp,
+    grid_hit_counts_jnp,
+    stack_grids,
+)
+from repro.core.scene import Scene, pad_scene_arrays
+from repro.kernels import ops as _ops
+
+__all__ = [
+    "Backend",
+    "QueryRequest",
+    "BatchRequest",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "DenseBackend",
+    "DenseRefBackend",
+    "GridBackend",
+    "BvhBackend",
+    "BruteBackend",
+]
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """Everything a backend may need for one single-query count.
+
+    Geometric backends read ``xs/ys`` + ``scene`` (+ ``index``); the
+    geometry-free brute backend reads ``users/facilities/q_pt/exclude``.
+    """
+
+    xs: jnp.ndarray  # [N] f32 user x
+    ys: jnp.ndarray  # [N] f32 user y
+    k: int
+    grid_g: int = 64
+    scene: Scene | None = None
+    index: Any = None
+    users: np.ndarray | None = None  # [N, 2] f64
+    facilities: np.ndarray | None = None  # [M, 2] f64
+    q_pt: np.ndarray | None = None  # [2]
+    exclude: int | None = None
+
+
+@dataclasses.dataclass
+class BatchRequest:
+    """One batched multi-query count over a shared user set.
+
+    ``mp`` is the static triangle pad target for stacked dense scenes
+    (power-of-two bucketed by the engine so repeat workloads reuse one jit
+    trace).  ``dense_dispatch`` optionally overrides the dense device step
+    — the engine injects its persistent (possibly mesh-sharded) jitted
+    dispatch here.
+    """
+
+    xs: jnp.ndarray  # [N] f32
+    ys: jnp.ndarray  # [N] f32
+    k: int
+    rect: Rect | None = None
+    grid_g: int = 64
+    scenes: list[Scene] | None = None
+    indexes: list | None = None
+    users: np.ndarray | None = None
+    facilities: np.ndarray | None = None
+    q_pts: np.ndarray | None = None  # [Q, 2]
+    excludes: list[int | None] | None = None
+    mp: int | None = None
+    dense_dispatch: Callable | None = None
+
+
+class Backend:
+    """Protocol + default implementations for a verification backend."""
+
+    name: ClassVar[str]
+    #: False for geometry-free backends (no scene construction at all);
+    #: the engine skips the whole filter phase for them.
+    uses_scene: ClassVar[bool] = True
+
+    # ---- filter phase (host) --------------------------------------------
+    def build_index(self, scene: Scene, *, grid_g: int = 64):
+        """Host-side per-scene index build (grid/BVH); ``None`` if unused."""
+        return None
+
+    def prepare_batch(self, req: BatchRequest):
+        """Host-side batch stacking; the returned object is what
+        :meth:`count_batch` dispatches.  Runs inside ``t_filter_s``."""
+        return None
+
+    # ---- verify phase (device) ------------------------------------------
+    def count(self, req: QueryRequest) -> np.ndarray:
+        """``[N]`` int32 hit counts for one query."""
+        raise NotImplementedError
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        """``[Q, N]`` int32 hit counts in one batched device dispatch."""
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(cls: type[Backend]) -> type[Backend]:
+    """Class decorator: instantiate and register under ``cls.name``.
+
+    Later registrations override earlier ones (so tests / downstream code
+    can shadow a built-in with an instrumented variant).
+    """
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"backend must be one of {available_backends()}, got {name!r}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Dense (stacked edge functions, no index)
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class DenseBackend(Backend):
+    """Pallas ray-cast kernel over the full padded scene."""
+
+    name = "dense"
+    kernel_backend = "pallas"
+
+    def count(self, req: QueryRequest) -> np.ndarray:
+        return np.asarray(
+            _ops.raycast_count(
+                req.xs, req.ys, req.scene.coeffs, backend=self.kernel_backend
+            )
+        )
+
+    def prepare_batch(self, req: BatchRequest) -> np.ndarray:
+        scenes = req.scenes
+        mp = req.mp if req.mp is not None else max(s.tris.shape[0] for s in scenes)
+        return np.stack(
+            [
+                pad_scene_arrays(
+                    s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], mp
+                )[1]
+                for s in scenes
+            ]
+        ).astype(np.float32)  # [Q, Mp, 3, 3]
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        if req.dense_dispatch is not None:
+            return np.asarray(req.dense_dispatch(req.xs, req.ys, prepared))
+        return np.asarray(
+            _ops.raycast_count_batch(
+                req.xs, req.ys, prepared, backend=self.kernel_backend
+            )
+        )
+
+
+@register_backend
+class DenseRefBackend(DenseBackend):
+    """Pure-jnp oracle of the dense path (the fast CPU execution)."""
+
+    name = "dense-ref"
+    kernel_backend = "ref"
+
+
+# --------------------------------------------------------------------------
+# Grid (uniform-grid culling, the TPU BVH analogue)
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class GridBackend(Backend):
+    name = "grid"
+
+    def build_index(self, scene: Scene, *, grid_g: int = 64):
+        return build_grid(
+            scene.tris[: scene.n_tris],
+            scene.coeffs[: scene.n_tris],
+            scene.rect,
+            G=grid_g,
+        )
+
+    def count(self, req: QueryRequest) -> np.ndarray:
+        g = req.index
+        if g is None:
+            g = self.build_index(req.scene, grid_g=req.grid_g)
+        return np.asarray(
+            grid_hit_counts_jnp(
+                req.xs, req.ys, g.base, g.lists, g.coeffs, req.scene.rect, req.grid_g
+            )
+        )
+
+    def prepare_batch(self, req: BatchRequest):
+        indexes = req.indexes
+        if indexes is None:
+            indexes = [self.build_index(s, grid_g=req.grid_g) for s in req.scenes]
+        return stack_grids(indexes)  # (base, lists, coeffs)
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        base, lists, coeffs = prepared
+        return np.asarray(
+            grid_hit_counts_batch_jnp(
+                req.xs, req.ys, base, lists, coeffs, req.rect, req.grid_g
+            )
+        )
+
+
+# --------------------------------------------------------------------------
+# BVH (paper-faithful traversal with early termination at k)
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class BvhBackend(Backend):
+    name = "bvh"
+
+    def build_index(self, scene: Scene, *, grid_g: int = 64):
+        return build_bvh(scene.tris[: scene.n_tris])
+
+    def count(self, req: QueryRequest) -> np.ndarray:
+        bvh = req.index
+        if bvh is None:
+            bvh = self.build_index(req.scene, grid_g=req.grid_g)
+        return np.asarray(
+            bvh_hit_counts(
+                req.xs,
+                req.ys,
+                bvh.left,
+                bvh.right,
+                bvh.bbox,
+                req.scene.coeffs[: req.scene.n_tris],
+                k=req.k,
+            )
+        )
+
+    def prepare_batch(self, req: BatchRequest):
+        indexes = req.indexes
+        if indexes is None:
+            indexes = [self.build_index(s, grid_g=req.grid_g) for s in req.scenes]
+        return stack_bvhs(indexes, [s.coeffs[: s.n_tris] for s in req.scenes])
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        left, right, bbox, coeffs = prepared
+        return np.asarray(
+            bvh_hit_counts_batch(req.xs, req.ys, left, right, bbox, coeffs, k=req.k)
+        )
+
+
+# --------------------------------------------------------------------------
+# Brute (exact distance-rank counting; no geometry at all)
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class BruteBackend(Backend):
+    name = "brute"
+    uses_scene = False
+
+    def count(self, req: QueryRequest) -> np.ndarray:
+        return np.asarray(
+            _ops.rank_count(
+                req.users, req.facilities, req.q_pt, exclude=req.exclude, backend="ref"
+            )
+        )
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        return np.asarray(
+            _ops.rank_count_batch(
+                req.users, req.facilities, req.q_pts, exclude=req.excludes
+            )
+        )

@@ -1,0 +1,601 @@
+"""Stateful RkNN query engine: build once, serve many query waves.
+
+The paper's performance story is amortization — construct geometry once,
+cast many rays (RT-kNNS Unbound and RTNN make the same point for RT-core
+kNN: the wins come from reusing the built acceleration structure across
+query batches).  :class:`RkNNEngine` is the long-lived object that state
+hangs off:
+
+* the shared domain :class:`~repro.core.geometry.Rect` and the device-
+  resident user coordinate arrays (uploaded once, like the paper's
+  "plain GPU transfer" of Table 2);
+* a :class:`~repro.core.hybrid.SceneCache` so hot queries skip InfZone
+  pruning + occluder construction entirely (cache hits show up directly
+  as a collapsed ``t_filter_s``);
+* a batch-level LRU of prepared backend state (stacked coeffs / stacked
+  grid / stacked BVH), so a repeated query workload skips the whole host
+  filter phase;
+* persistent jitted dispatches: scene pads are bucketed to sticky powers
+  of two, so repeat workloads re-enter the same XLA executable instead of
+  re-tracing;
+* an optional ``jax.sharding.Mesh`` — the dense-ref batch dispatch is then
+  pjit'd with users sharded over the data axes and queries over
+  ``'model'`` (the serving layout previously trapped in ``launch/serve``).
+
+Verification backends are pluggable via :mod:`repro.core.backends`; the
+legacy free functions (``rt_rknn_query`` etc.) are one-shot shims over a
+throwaway engine.  Lifecycle, config knobs, and the migration table from
+the free functions live in ``docs/API.md``.
+"""
+
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import (
+    Backend,
+    BatchRequest,
+    QueryRequest,
+    get_backend,
+)
+from repro.core.geometry import Rect
+from repro.core.hybrid import SceneCache, _q_key
+from repro.core.results import RkNNBatchResult, RkNNResult
+from repro.core.scene import Scene, build_scene
+
+__all__ = ["RkNNConfig", "EngineStats", "RkNNEngine", "serve_shardings"]
+
+
+def serve_shardings(mesh):
+    """The serving partition layout: ``(user_sh, scene_sh, out_sh)``.
+
+    Users sharded over the data-parallel axes, per-query scenes replicated
+    (they are tiny — ~64 triangles · 36 B), queries sharded over
+    ``'model'``.  Single source of truth for the engine's live dispatch
+    and ``launch.serve.lower_rknn_serve``'s dry-run lowering.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.meshctx import dp_axes
+
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    user_sh = NamedSharding(mesh, P(dp_spec))
+    scene_sh = NamedSharding(mesh, P("model", None, None, None))
+    out_sh = NamedSharding(mesh, P("model", dp_spec))
+    return user_sh, scene_sh, out_sh
+
+
+@dataclasses.dataclass(frozen=True)
+class RkNNConfig:
+    """Construction-time knobs of :class:`RkNNEngine` (see docs/API.md).
+
+    ``scene_cache`` / ``batch_cache`` are LRU capacities (0 disables).
+    ``pad_scene_to`` seeds the sticky power-of-two triangle pad bucket;
+    ``pad_to`` pins it exactly (overriding bucketing) when not ``None``.
+    """
+
+    backend: str = "dense-ref"
+    strategy: str = "infzone"
+    grid_g: int = 64
+    prune_grid: int | None = None
+    pad_to: int | None = None
+    scene_workers: int = 0
+    scene_cache: int = 256
+    batch_cache: int = 8
+    pad_scene_to: int = 128
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative counters over the engine's lifetime."""
+
+    n_queries: int = 0
+    n_batches: int = 0
+    t_filter_s: float = 0.0
+    t_verify_s: float = 0.0
+    m_max: int = 0
+    batch_cache_hits: int = 0
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def _normalize_queries(
+    facilities: np.ndarray, qs
+) -> tuple[list[int | np.ndarray], np.ndarray, list[int | None]]:
+    """Split a query batch into per-query build args, points, and excludes."""
+    queries: list[int | np.ndarray] = []
+    q_pts = np.zeros((len(qs), 2), np.float64)
+    excludes: list[int | None] = []
+    for i, q in enumerate(qs):
+        arr = np.asarray(q)
+        if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
+            qi = int(arr)
+            queries.append(qi)
+            q_pts[i] = facilities[qi]
+            excludes.append(qi)
+        else:
+            pt = np.asarray(q, np.float64).reshape(2)
+            queries.append(pt)
+            q_pts[i] = pt
+            excludes.append(None)
+    return queries, q_pts, excludes
+
+
+class RkNNEngine:
+    """Build once from ``(facilities, users, RkNNConfig)``; query many times.
+
+    Exposes :meth:`query`, :meth:`query_batch`, :meth:`query_mono`, and
+    :meth:`stream` (double-buffered host scene builds overlapping device
+    dispatch).  Backend selection defaults to ``config.backend`` and can be
+    overridden per call with any name in the backend registry.
+    """
+
+    def __init__(
+        self,
+        facilities: np.ndarray,
+        users: np.ndarray,
+        config: RkNNConfig | None = None,
+        *,
+        mesh=None,
+        rect: Rect | None = None,
+        **overrides,
+    ):
+        config = config or RkNNConfig()
+        if overrides:
+            config = dataclasses.replace(config, **overrides)
+        get_backend(config.backend)  # validate eagerly
+        self.config = config
+        self.facilities = np.asarray(facilities, dtype=np.float64)
+        self.users = np.asarray(users, dtype=np.float64)
+        self.mesh = mesh
+        self.stats = EngineStats()
+        self.scene_cache: SceneCache | None = (
+            SceneCache(capacity=config.scene_cache) if config.scene_cache > 0 else None
+        )
+        self._fp: int | None = None  # facility fingerprint, computed once
+        self._batch_cache: "collections.OrderedDict[tuple, tuple]" = (
+            collections.OrderedDict()
+        )
+        self._batch_lock = threading.Lock()  # stream() mutates from producer
+        self._pad_bucket = max(int(config.pad_scene_to), 1)
+        self._explicit_rect = rect is not None
+        self._rect = rect
+        self._hull: tuple[np.ndarray, np.ndarray] | None = None
+        self._xs = self._ys = None  # lazy device arrays
+        self._mono: "RkNNEngine | None" = None
+        self._is_mono: bool | None = None
+        self._mesh_step = None
+        if mesh is not None:
+            self._init_mesh(mesh)
+
+    # ------------------------------------------------------------------
+    # lazy shared state
+    # ------------------------------------------------------------------
+    @property
+    def rect(self) -> Rect:
+        """The shared domain rectangle (facilities ∪ users, padded)."""
+        if self._rect is None:
+            self._rect = Rect.from_bounds(*self._hull_bounds())
+        return self._rect
+
+    def _hull_bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        """Unpadded min/max of facilities ∪ users (lazy, cached)."""
+        if self._hull is None:
+            pts = np.concatenate([self.facilities, self.users])
+            self._hull = (pts.min(axis=0), pts.max(axis=0))
+        return self._hull
+
+    @property
+    def xs(self) -> jnp.ndarray:
+        if self._xs is None:
+            self._xs = jnp.asarray(self.users[:, 0], jnp.float32)
+            self._ys = jnp.asarray(self.users[:, 1], jnp.float32)
+        return self._xs
+
+    @property
+    def ys(self) -> jnp.ndarray:
+        self.xs  # noqa: B018 — materializes both
+        return self._ys
+
+    def _rect_for(self, q_pts: np.ndarray) -> Rect:
+        """Shared rect, extended only when a query point falls outside the
+        facility∪user hull (keeps one-shot shims bit-compatible with the
+        old per-call ``Rect.from_points(F, q, U)``)."""
+        if self._explicit_rect:
+            return self.rect
+        lo, hi = self._hull_bounds()
+        if np.all(q_pts >= lo) and np.all(q_pts <= hi):
+            return self.rect
+        return Rect.from_points(self.facilities, q_pts, self.users)
+
+    def _fingerprint(self) -> int:
+        if self._fp is None:
+            self._fp = SceneCache.fingerprint(self.facilities)
+        return self._fp
+
+    # ------------------------------------------------------------------
+    # mesh-sharded dense dispatch (absorbed from launch/serve.py)
+    # ------------------------------------------------------------------
+    def _init_mesh(self, mesh) -> None:
+        from repro.distributed.meshctx import dp_axes
+        from repro.kernels.ref import raycast_count_batch_ref
+
+        dp = dp_axes(mesh)
+        user_sh, scene_sh, out_sh = serve_shardings(mesh)
+        xs = self.users[:, 0].astype(np.float32)
+        ys = self.users[:, 1].astype(np.float32)
+        n = len(xs)
+        dpn = int(np.prod([mesh.shape[a] for a in dp]))
+        padn = (-n) % dpn
+        if padn:  # sentinel users far outside every scene; sliced off below
+            xs = np.concatenate([xs, np.full(padn, 2e9, np.float32)])
+            ys = np.concatenate([ys, np.full(padn, 2e9, np.float32)])
+        mesh_xs = jax.device_put(xs, user_sh)
+        mesh_ys = jax.device_put(ys, user_sh)
+        step = jax.jit(
+            raycast_count_batch_ref,
+            in_shardings=(user_sh, user_sh, scene_sh),
+            out_shardings=out_sh,
+        )
+
+        def dispatch(_xs, _ys, coeffs):
+            return np.asarray(step(mesh_xs, mesh_ys, jnp.asarray(coeffs)))[:, :n]
+
+        self._mesh_step = dispatch
+
+    def _dense_dispatch_for(self, backend: Backend):
+        """Engine-held dispatch override: the mesh-sharded pjit step runs
+        the ref math, so only the dense-ref backend routes through it."""
+        if self._mesh_step is not None and backend.name == "dense-ref":
+            return self._mesh_step
+        return None
+
+    # ------------------------------------------------------------------
+    # filter phase helpers (host)
+    # ------------------------------------------------------------------
+    def _build_scene(self, q, k: int, rect: Rect, *, pad_to: int | None = None):
+        if self.scene_cache is not None and pad_to is None:
+            scene, _hit = self.scene_cache.get_or_build(
+                self.facilities,
+                q,
+                k,
+                rect,
+                fp=self._fingerprint(),
+                strategy=self.config.strategy,
+                grid=self.config.prune_grid,
+                users_hint=self.users,
+            )
+            return scene
+        return build_scene(
+            self.facilities,
+            q,
+            k,
+            rect,
+            strategy=self.config.strategy,
+            grid=self.config.prune_grid,
+            pad_to=pad_to,
+            users_hint=self.users,
+        )
+
+    def _index_for(self, backend: Backend, scene: Scene) -> Any:
+        """Per-scene index, memoized on the scene object so cached scenes
+        carry their grid/BVH across repeated queries."""
+        store = getattr(scene, "_engine_indexes", None)
+        if store is None:
+            store = {}
+            object.__setattr__(scene, "_engine_indexes", store)
+        key = (backend.name, self.config.grid_g)
+        if key not in store:
+            store[key] = backend.build_index(scene, grid_g=self.config.grid_g)
+        return store[key]
+
+    def _mp_bucket(self, scenes: list[Scene]) -> int:
+        if self.config.pad_to is not None:
+            return self.config.pad_to
+        mmax = max(s.tris.shape[0] for s in scenes)
+        with self._batch_lock:
+            self._pad_bucket = max(self._pad_bucket, _next_pow2(mmax))
+            return self._pad_bucket
+
+    def _filter_batch(
+        self,
+        backend: Backend,
+        queries: list,
+        q_pts: np.ndarray,
+        excludes: list,
+        k: int,
+        rect: Rect,
+        scene_workers: int,
+    ) -> tuple[BatchRequest, Any, list[Scene]]:
+        """Host filter phase for one batch: scenes + stacked backend state,
+        LRU-cached by (backend, k, queries, rect) so a repeated workload
+        collapses to a dictionary lookup."""
+        cache_key = None
+        if self.config.batch_cache > 0:
+            cache_key = (
+                backend.name,
+                k,
+                tuple(_q_key(q) for q in queries),
+                rect,
+            )
+            with self._batch_lock:
+                hit = self._batch_cache.get(cache_key)
+                if hit is not None:
+                    self._batch_cache.move_to_end(cache_key)
+                    self.stats.batch_cache_hits += 1
+                    req, prepared, scenes = hit
+                    return req, prepared, scenes
+
+        def one(q):
+            return self._build_scene(q, k, rect)
+
+        if scene_workers > 0 and len(queries) > 1:
+            with concurrent.futures.ThreadPoolExecutor(scene_workers) as pool:
+                scenes = list(pool.map(one, queries))
+        else:
+            scenes = [one(q) for q in queries]
+        dispatch = self._dense_dispatch_for(backend)
+        # the mesh dispatch closes over its own sharded user arrays — don't
+        # materialize a second, replicated device copy it would never read
+        req = BatchRequest(
+            xs=None if dispatch is not None else self.xs,
+            ys=None if dispatch is not None else self.ys,
+            k=k,
+            rect=rect,
+            grid_g=self.config.grid_g,
+            scenes=scenes,
+            # per-scene index memo: scene-cache hits reuse their grid/BVH
+            # instead of rebuilding it on every new batch composition
+            indexes=[self._index_for(backend, s) for s in scenes],
+            users=self.users,
+            facilities=self.facilities,
+            q_pts=q_pts,
+            excludes=excludes,
+            mp=self._mp_bucket(scenes),
+            dense_dispatch=dispatch,
+        )
+        prepared = backend.prepare_batch(req)
+        if cache_key is not None:
+            with self._batch_lock:
+                self._batch_cache[cache_key] = (req, prepared, scenes)
+                if len(self._batch_cache) > self.config.batch_cache:
+                    self._batch_cache.popitem(last=False)
+        return req, prepared, scenes
+
+    # ------------------------------------------------------------------
+    # public query surface
+    # ------------------------------------------------------------------
+    def query(self, q, k: int, *, backend: str | None = None) -> RkNNResult:
+        """Bichromatic RkNN of one query (facility index or ``[2]`` point)."""
+        b = get_backend(backend or self.config.backend)
+        arr = np.asarray(q)
+        if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
+            q_build: int | np.ndarray = int(arr)
+            q_pt, exclude = self.facilities[int(arr)], int(arr)
+        else:
+            q_pt = np.asarray(q, np.float64).reshape(2)
+            q_build, exclude = q_pt, None
+
+        if not b.uses_scene:
+            # geometry-free: never materialize the device user arrays
+            t0 = time.perf_counter()
+            counts = b.count(
+                QueryRequest(
+                    xs=None,
+                    ys=None,
+                    k=k,
+                    users=self.users,
+                    facilities=self.facilities,
+                    q_pt=q_pt,
+                    exclude=exclude,
+                )
+            )
+            t1 = time.perf_counter()
+            self.stats.n_queries += 1
+            self.stats.t_verify_s += t1 - t0
+            return RkNNResult(counts < k, counts, None, 0.0, t1 - t0, b.name)
+
+        t0 = time.perf_counter()
+        rect = self._rect_for(q_pt[None])
+        scene = self._build_scene(q_build, k, rect, pad_to=self.config.pad_to)
+        index = self._index_for(b, scene)
+        t1 = time.perf_counter()
+        counts = b.count(
+            QueryRequest(
+                xs=self.xs,
+                ys=self.ys,
+                k=k,
+                grid_g=self.config.grid_g,
+                scene=scene,
+                index=index,
+            )
+        )
+        t2 = time.perf_counter()
+        self.stats.n_queries += 1
+        self.stats.t_filter_s += t1 - t0
+        self.stats.t_verify_s += t2 - t1
+        self.stats.m_max = max(self.stats.m_max, scene.n_tris)
+        return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, b.name)
+
+    def query_batch(
+        self,
+        qs,
+        k: int,
+        *,
+        backend: str | None = None,
+        scene_workers: int | None = None,
+    ) -> RkNNBatchResult:
+        """Batched bichromatic RkNN: all of ``qs`` against the shared users.
+
+        One host filter phase (scene builds — cache-aware — plus backend
+        stacking) and ONE batched device dispatch.  Masks are bit-identical
+        to looping :meth:`query` per query (equivalence-tested across all
+        backends).
+        """
+        b = get_backend(backend or self.config.backend)
+        workers = (
+            self.config.scene_workers if scene_workers is None else scene_workers
+        )
+        qs = list(qs)
+        n_users = len(self.users)
+        if not qs:
+            return RkNNBatchResult(
+                masks=np.zeros((0, n_users), bool),
+                counts=np.zeros((0, n_users), np.int32),
+                scenes=None if not b.uses_scene else [],
+                t_filter_s=0.0,
+                t_verify_s=0.0,
+                backend=b.name,
+                k=k,
+            )
+        queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
+
+        if not b.uses_scene:
+            t0 = time.perf_counter()
+            counts = b.count_batch(
+                BatchRequest(
+                    xs=None,
+                    ys=None,
+                    k=k,
+                    users=self.users,
+                    facilities=self.facilities,
+                    q_pts=q_pts,
+                    excludes=excludes,
+                ),
+                None,
+            )
+            t1 = time.perf_counter()
+            self.stats.n_queries += len(qs)
+            self.stats.n_batches += 1
+            self.stats.t_verify_s += t1 - t0
+            return RkNNBatchResult(counts < k, counts, None, 0.0, t1 - t0, b.name, k)
+
+        t0 = time.perf_counter()
+        rect = self._rect_for(q_pts)
+        req, prepared, scenes = self._filter_batch(
+            b, queries, q_pts, excludes, k, rect, workers
+        )
+        t1 = time.perf_counter()
+        counts = b.count_batch(req, prepared)
+        t2 = time.perf_counter()
+        self.stats.n_queries += len(qs)
+        self.stats.n_batches += 1
+        self.stats.t_filter_s += t1 - t0
+        self.stats.t_verify_s += t2 - t1
+        self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
+        return RkNNBatchResult(counts < k, counts, scenes, t1 - t0, t2 - t1, b.name, k)
+
+    def query_mono(self, q_idx: int, k: int, *, backend: str | None = None) -> RkNNResult:
+        """Monochromatic RkNN over the facility set (paper §2.1 / §4.5).
+
+        Reduces to the bichromatic machinery with ``F = U = facilities`` at
+        threshold ``k + 1`` (every point's ray hits its own occluder), then
+        self-hit-corrects the counts — see docs/API.md for the derivation.
+        """
+        if self._is_mono is None:
+            self._is_mono = self.users is self.facilities or (
+                self.users.shape == self.facilities.shape
+                and np.array_equal(self.users, self.facilities)
+            )
+        eng = self
+        if not self._is_mono:
+            if self._mono is None:
+                # mesh is deliberately not forwarded: the single-query path
+                # never routes through the sharded batch dispatch
+                self._mono = RkNNEngine(
+                    self.facilities,
+                    self.facilities,
+                    self.config,
+                    rect=self._rect if self._explicit_rect else None,
+                )
+            eng = self._mono
+        res = eng.query(int(q_idx), k + 1, backend=backend)
+        if eng is not self:  # mirror the sub-engine's work into our stats
+            self.stats.n_queries += 1
+            self.stats.t_filter_s += res.t_filter_s
+            self.stats.t_verify_s += res.t_verify_s
+        counts = np.asarray(res.counts, np.int32).copy()
+        # self-hit correction: every point except q hits its own occluder
+        # (q's occluder is excluded from the scene, so its count is already
+        # "others")
+        counts[np.arange(len(counts)) != q_idx] -= 1
+        np.maximum(counts, 0, out=counts)
+        mask = counts < k
+        mask[q_idx] = False
+        return RkNNResult(
+            mask, counts, res.scene, res.t_filter_s, res.t_verify_s, res.backend
+        )
+
+    def stream(self, batches, k: int, *, backend: str | None = None):
+        """Double-buffered batch stream: the host filter phase of batch
+        ``i+1`` (scene builds + stacking, in a producer thread) overlaps the
+        device dispatch of batch ``i``.  Yields ``(batch, masks[Q, N])``.
+
+        Producer exceptions are re-raised in the consumer — the generator
+        never hangs on a failed build.
+        """
+        b = get_backend(backend or self.config.backend)
+        buf: "queue.Queue" = queue.Queue(maxsize=2)
+
+        def producer():
+            try:
+                for batch in batches:
+                    qs = list(batch)
+                    t0 = time.perf_counter()
+                    queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
+                    if b.uses_scene:
+                        rect = self._rect_for(q_pts)
+                        built = self._filter_batch(
+                            b, queries, q_pts, excludes, k, rect,
+                            self.config.scene_workers,
+                        )
+                    else:
+                        req = BatchRequest(
+                            xs=None,
+                            ys=None,
+                            k=k,
+                            users=self.users,
+                            facilities=self.facilities,
+                            q_pts=q_pts,
+                            excludes=excludes,
+                        )
+                        built = (req, None, None)
+                    self.stats.t_filter_s += time.perf_counter() - t0
+                    buf.put((batch, len(qs), built))
+                buf.put(None)
+            except BaseException as e:  # surface in the consumer, no deadlock
+                buf.put(e)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = buf.get()
+            if item is None:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            batch, q_n, (req, prepared, scenes) = item
+            t0 = time.perf_counter()
+            counts = b.count_batch(req, prepared)
+            self.stats.t_verify_s += time.perf_counter() - t0
+            self.stats.n_queries += q_n
+            self.stats.n_batches += 1
+            if scenes:
+                self.stats.m_max = max(
+                    self.stats.m_max, max(s.n_tris for s in scenes)
+                )
+            yield batch, counts < k

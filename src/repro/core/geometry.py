@@ -50,16 +50,13 @@ class Rect:
 
     # ---- constructors -------------------------------------------------
     @staticmethod
-    def from_points(*point_sets: np.ndarray, pad_frac: float = 0.01) -> "Rect":
-        """Bounding rectangle of one or more ``[N, 2]`` point sets, padded.
+    def from_bounds(lo: np.ndarray, hi: np.ndarray, pad_frac: float = 0.01) -> "Rect":
+        """Padded rectangle from precomputed ``[2]`` min/max bounds.
 
         The pad keeps users strictly interior so boundary-degenerate
         occluder cases (bisector through a corner) have measure ~zero.
         """
-        pts = np.concatenate([np.asarray(p, dtype=np.float64) for p in point_sets])
-        lo = pts.min(axis=0)
-        hi = pts.max(axis=0)
-        span = np.maximum(hi - lo, 1e-9)
+        span = np.maximum(np.asarray(hi, np.float64) - np.asarray(lo, np.float64), 1e-9)
         pad = pad_frac * span
         return Rect(
             float(lo[0] - pad[0]),
@@ -67,6 +64,12 @@ class Rect:
             float(hi[0] + pad[0]),
             float(hi[1] + pad[1]),
         )
+
+    @staticmethod
+    def from_points(*point_sets: np.ndarray, pad_frac: float = 0.01) -> "Rect":
+        """Bounding rectangle of one or more ``[N, 2]`` point sets, padded."""
+        pts = np.concatenate([np.asarray(p, dtype=np.float64) for p in point_sets])
+        return Rect.from_bounds(pts.min(axis=0), pts.max(axis=0), pad_frac)
 
     # ---- basic queries -------------------------------------------------
     @property

@@ -1,11 +1,13 @@
 """Paper future-work items implemented (Conclusions §5, directions 2–3).
 
 * **Scene cache** (direction 2 — "batched query processing to amortize
-  scene construction"): per-(facility-set, q, k) LRU of built scenes.  A
-  repeated query skips InfZone pruning + occluder construction entirely —
+  scene construction"): per-(facility-set, q, k, rect) LRU of built scenes.
+  A repeated query skips InfZone pruning + occluder construction entirely —
   in serving workloads with hot facilities (the paper's motivating
   hospitals / delivery hubs) this amortizes the dominant per-query cost
-  (EXPERIMENTS §Perf-RkNN: filter ≈ 20–100 ms vs sub-ms cast).
+  (EXPERIMENTS §Perf-RkNN: filter ≈ 20–100 ms vs sub-ms cast).  The
+  long-lived owner of a cache is :class:`repro.core.engine.RkNNEngine`,
+  which wires it into the single, batched, and streaming paths.
 
 * **Hybrid dispatcher** (direction 3 — "dynamically select between
   RT-RkNN and traditional pruning based on data characteristics"): a
@@ -25,22 +27,42 @@
 from __future__ import annotations
 
 import collections
+import threading
+import time
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core.baselines.slice import slice_rknn
-from repro.core.rknn import RkNNResult, rt_rknn_query
+from repro.core.results import RkNNResult
 from repro.core.scene import Scene, build_scene
 
 __all__ = ["SceneCache", "choose_engine", "hybrid_rknn_query"]
 
 
+def _q_key(q):
+    """Hashable cache key component for a query (index or [2] point)."""
+    if np.isscalar(q) or isinstance(q, (int, np.integer)):
+        return int(q)
+    return tuple(np.asarray(q, np.float64).reshape(-1).tolist())
+
+
 class SceneCache:
-    """LRU of built scenes keyed by (facility-set fingerprint, q, k)."""
+    """LRU of built scenes keyed by (facility-set fingerprint, q, k, rect).
+
+    ``rect`` participates in the key because occluder triangles are clipped
+    against the domain rectangle — the same query under a different rect is
+    a different scene (the batched grid path additionally requires every
+    stacked scene to share one rect).  Long-lived callers (the engine) pass
+    a precomputed ``fp`` so the facility array is fingerprinted once, not
+    per query.
+    """
 
     def __init__(self, capacity: int = 256):
         self.capacity = capacity
         self._store: "collections.OrderedDict[tuple, Scene]" = collections.OrderedDict()
+        self._lock = threading.Lock()  # engine may build scenes from a pool
         self.hits = 0
         self.misses = 0
 
@@ -49,17 +71,23 @@ class SceneCache:
         f = np.ascontiguousarray(facilities, dtype=np.float64)
         return hash((f.shape, f.tobytes()[:4096], float(f.sum())))
 
-    def get_or_build(self, facilities, q, k, rect=None, **kw) -> tuple[Scene, bool]:
-        key = (self.fingerprint(facilities), int(q) if np.isscalar(q) or isinstance(q, (int, np.integer)) else tuple(np.asarray(q)), k)
-        if key in self._store:
-            self._store.move_to_end(key)
-            self.hits += 1
-            return self._store[key], True
+    def get_or_build(
+        self, facilities, q, k, rect=None, *, fp: int | None = None, **kw
+    ) -> tuple[Scene, bool]:
+        if fp is None:
+            fp = self.fingerprint(facilities)
+        key = (fp, _q_key(q), k, rect)
+        with self._lock:
+            if key in self._store:
+                self._store.move_to_end(key)
+                self.hits += 1
+                return self._store[key], True
         scene = build_scene(facilities, q, k, rect, **kw)
-        self._store[key] = scene
-        if len(self._store) > self.capacity:
-            self._store.popitem(last=False)
-        self.misses += 1
+        with self._lock:
+            self._store[key] = scene
+            if len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+            self.misses += 1
         return scene, False
 
 
@@ -99,9 +127,6 @@ def hybrid_rknn_query(
     work 2).  Returns an :class:`RkNNResult` either way."""
     engine = force or choose_engine(len(facilities), len(users), k)
     if engine == "slice":
-        import time
-
-        t0 = time.perf_counter()
         mask, info = slice_rknn(facilities, users, q, k)
         return RkNNResult(
             mask=mask,
@@ -112,14 +137,23 @@ def hybrid_rknn_query(
             backend="slice",
         )
     if cache is not None:
-        import time
+        from repro.core.backends import QueryRequest, get_backend
 
         t0 = time.perf_counter()
         scene, hit = cache.get_or_build(facilities, q, k, users_hint=users)
         t1 = time.perf_counter()
-        from repro.core.rknn import _verify_counts
-
-        counts = _verify_counts(users, scene, k, "dense-ref", 64)
+        backend = get_backend("dense-ref")
+        users = np.asarray(users, np.float64)
+        counts = backend.count(
+            QueryRequest(
+                xs=jnp.asarray(users[:, 0], jnp.float32),
+                ys=jnp.asarray(users[:, 1], jnp.float32),
+                k=k,
+                scene=scene,
+            )
+        )
         t2 = time.perf_counter()
         return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, "dense-ref")
+    from repro.core.rknn import rt_rknn_query
+
     return rt_rknn_query(facilities, users, q, k, backend="dense-ref")

@@ -1,52 +1,33 @@
-"""Public RT-RkNN query API (Algorithm 1 end-to-end), single and batched.
+"""Legacy free-function RkNN API — one-shot shims over :class:`RkNNEngine`.
 
-Backends (all produce identical verdict sets — property-tested):
+The stateful engine (:mod:`repro.core.engine`) is the primary query
+surface: it owns the shared domain rect, the scene cache, per-backend
+prebuilt state, and persistent jitted dispatches, so repeated query waves
+amortize everything the paper says should be amortized.  These functions
+construct a throwaway engine per call (caches disabled — a one-shot call
+cannot amortize anything) and therefore keep their historical semantics
+bit-for-bit: same masks, same counts, same two-stage timing convention.
 
-* ``"dense"``    — Pallas ray-cast kernel (interpret mode on CPU), the
-                   TPU-native execution of the paper's ray-casting stage.
-* ``"dense-ref"``— pure-jnp oracle (fast on CPU; same math).
-* ``"grid"``     — uniform-grid culled counting (TPU BVH analogue).
-* ``"bvh"``      — paper-faithful LBVH traversal with early termination.
-* ``"brute"``    — exact distance-rank counting (no geometry; baseline).
-
-The scene-construction phase (host, numpy) matches paper Alg. 1 lines 1–8:
-InfZone-style pruning → occluder triangles → index build.  The ray-casting
-phase (device, JAX) is lines 9–24.
+Backend names resolve through the registry in :mod:`repro.core.backends`
+(``dense``, ``dense-ref``, ``grid``, ``bvh``, ``brute`` built in; new
+backends register a class instead of threading through dispatch ladders).
 
 Timing semantics (§4.1 / [62] two-stage convention): *filtering*
 (``t_filter_s``) covers everything on the host that prepares the query —
 pruning, occluder construction, padding, AND the grid/BVH index build;
-*verification* (``t_verify_s``) is only the device count dispatch.  (Before
-the batched engine landed, index build was mis-attributed to verification.)
+*verification* (``t_verify_s``) is only the device count dispatch.
 
-The batched engine (:func:`rt_rknn_query_batch`) amortizes per-query
-overheads the way RT-kNNS Unbound amortizes BVH builds across query
-batches: all ``Q`` scenes are built on the host (optionally via a thread
-pool), padded to one static ``Mp``, stacked to ``[Q, Mp, 3, 3]``, and
-counted in a single jitted batched dispatch per backend — one kernel
-launch / one index-gather sweep instead of ``Q`` Python-loop iterations.
+Migration table old → new: docs/API.md.
 """
 
 from __future__ import annotations
 
-import concurrent.futures
-import dataclasses
-import time
-
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.core.bvh import build_bvh, bvh_hit_counts, bvh_hit_counts_batch, stack_bvhs
+from repro.core.backends import available_backends
+from repro.core.engine import RkNNConfig, RkNNEngine
 from repro.core.geometry import Rect
-from repro.core.grid import (
-    build_grid,
-    grid_hit_counts_batch_jnp,
-    grid_hit_counts_jnp,
-    stack_grids,
-)
-from repro.core.scene import Scene, build_scene, pad_scene_arrays
-from repro.kernels import ops as _ops
+from repro.core.results import RkNNBatchResult, RkNNResult
 
 __all__ = [
     "RkNNResult",
@@ -57,117 +38,39 @@ __all__ = [
     "BACKENDS",
 ]
 
-BACKENDS = ("dense", "dense-ref", "grid", "bvh", "brute")
+#: Registered backend names, in registration order (kept as a module
+#: attribute for backward compatibility; the registry is the source of
+#: truth and late registrations won't be reflected here).
+BACKENDS = available_backends()
 
 
-@dataclasses.dataclass
-class RkNNResult:
-    """Query result + phase timings (paper's filtering/verification split).
-
-    Following §4.1 we report the two-stage convention of [62]: *filtering*
-    = scene construction (pruning + occluders + grid/BVH index build),
-    *verification* = the ray-cast / count stage only.
-
-    ``counts`` convention: for bichromatic queries these are raw occluder
-    hit counts (saturated at ``k`` for the bvh early-exit backend).  For
-    monochromatic queries (:func:`rknn_mono_query`) they are self-hit
-    corrected — ``counts[p]`` is the number of *other* points strictly
-    closer to ``p`` than ``q`` is, so ``mask == counts < k`` holds in both
-    cases.
-    """
-
-    mask: np.ndarray  # [N] bool — u ∈ RkNN(q)
-    counts: np.ndarray  # [N] int32 hit counts (saturated for bvh early-exit)
-    scene: Scene | None
-    t_filter_s: float
-    t_verify_s: float
-    backend: str
-
-    @property
-    def result_indices(self) -> np.ndarray:
-        return np.flatnonzero(self.mask)
-
-
-@dataclasses.dataclass
-class RkNNBatchResult:
-    """Batched multi-query result: per-query masks + amortized timings.
-
-    ``t_filter_s`` covers the whole batch's host work (scene builds,
-    padding/stacking, index builds); ``t_verify_s`` is the single batched
-    device dispatch.  Per-query attribution is therefore the mean:
-    ``t_filter_s / len(qs)`` etc.
-    """
-
-    masks: np.ndarray  # [Q, N] bool — u ∈ RkNN(q_i)
-    counts: np.ndarray  # [Q, N] int32 (saturated at k for bvh early-exit)
-    scenes: list[Scene] | None  # None for the brute backend
-    t_filter_s: float
-    t_verify_s: float
-    backend: str
-    k: int
-
-    @property
-    def n_queries(self) -> int:
-        return len(self.masks)
-
-    def result_indices(self, i: int) -> np.ndarray:
-        return np.flatnonzero(self.masks[i])
-
-    def per_query(self, i: int) -> RkNNResult:
-        """View of query ``i`` with mean-amortized timings."""
-        q_n = max(self.n_queries, 1)
-        return RkNNResult(
-            mask=self.masks[i],
-            counts=self.counts[i],
-            scene=None if self.scenes is None else self.scenes[i],
-            t_filter_s=self.t_filter_s / q_n,
-            t_verify_s=self.t_verify_s / q_n,
-            backend=self.backend,
-        )
-
-
-def _build_index(scene: Scene, backend: str, grid_g: int):
-    """Host-side index build for the verification backend (filter phase)."""
-    if backend == "grid":
-        return build_grid(
-            scene.tris[: scene.n_tris], scene.coeffs[: scene.n_tris], scene.rect, G=grid_g
-        )
-    if backend == "bvh":
-        return build_bvh(scene.tris[: scene.n_tris])
-    return None
-
-
-def _verify_counts(
-    users: np.ndarray, scene: Scene, k: int, backend: str, grid_g: int, index=None
-) -> np.ndarray:
-    """Device count stage.  ``index`` is the pre-built grid/BVH from
-    :func:`_build_index`; building it here would misattribute host index
-    construction to the verification phase."""
-    xs = jnp.asarray(users[:, 0], jnp.float32)
-    ys = jnp.asarray(users[:, 1], jnp.float32)
-    if backend == "dense":
-        return np.asarray(_ops.raycast_count(xs, ys, scene.coeffs))
-    if backend == "dense-ref":
-        return np.asarray(_ops.raycast_count(xs, ys, scene.coeffs, backend="ref"))
-    if backend == "grid":
-        g = index if index is not None else _build_index(scene, backend, grid_g)
-        return np.asarray(
-            grid_hit_counts_jnp(xs, ys, g.base, g.lists, g.coeffs, scene.rect, grid_g)
-        )
-    if backend == "bvh":
-        bvh = index if index is not None else _build_index(scene, backend, grid_g)
-        return np.asarray(
-            bvh_hit_counts(
-                xs,
-                ys,
-                bvh.left,
-                bvh.right,
-                bvh.bbox,
-                scene.coeffs[: scene.n_tris],
-                k=k,
-            )
-        )
-    raise ValueError(f"unknown backend {backend!r}")
+def _one_shot_engine(
+    facilities,
+    users,
+    *,
+    backend: str,
+    strategy: str = "infzone",
+    grid_g: int = 64,
+    prune_grid: int | None = None,
+    rect: Rect | None = None,
+    pad_to: int | None = None,
+    scene_workers: int = 0,
+) -> RkNNEngine:
+    return RkNNEngine(
+        facilities,
+        users,
+        RkNNConfig(
+            backend=backend,
+            strategy=strategy,
+            grid_g=grid_g,
+            prune_grid=prune_grid,
+            pad_to=pad_to,
+            scene_workers=scene_workers,
+            scene_cache=0,  # one-shot: nothing to amortize
+            batch_cache=0,
+        ),
+        rect=rect,
+    )
 
 
 def rt_rknn_query(
@@ -184,62 +87,22 @@ def rt_rknn_query(
     pad_to: int | None = None,
 ) -> RkNNResult:
     """Bichromatic RkNN of facility ``q`` (index into ``facilities`` or a
-    ``[2]`` point).  Returns membership mask over ``users``."""
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}")
-    facilities = np.asarray(facilities, dtype=np.float64)
-    users = np.asarray(users, dtype=np.float64)
+    ``[2]`` point).  Returns membership mask over ``users``.
 
-    if backend == "brute":
-        t0 = time.perf_counter()
-        if isinstance(q, (int, np.integer)):
-            q_pt, excl = facilities[int(q)], int(q)
-        else:
-            q_pt, excl = np.asarray(q, np.float64), None
-        counts = np.asarray(
-            _ops.rank_count(users, facilities, q_pt, exclude=excl, backend="ref")
-        )
-        t1 = time.perf_counter()
-        return RkNNResult(counts < k, counts, None, 0.0, t1 - t0, backend)
-
-    t0 = time.perf_counter()
-    scene = build_scene(
+    One-shot shim; for repeated queries build an :class:`RkNNEngine` once
+    and call :meth:`RkNNEngine.query`.
+    """
+    eng = _one_shot_engine(
         facilities,
-        q,
-        k,
-        rect,
+        users,
+        backend=backend,
         strategy=strategy,
-        grid=prune_grid,
+        grid_g=grid_g,
+        prune_grid=prune_grid,
+        rect=rect,
         pad_to=pad_to,
-        users_hint=users,
     )
-    index = _build_index(scene, backend, grid_g)
-    t1 = time.perf_counter()
-    counts = _verify_counts(users, scene, k, backend, grid_g, index=index)
-    t2 = time.perf_counter()
-    return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, backend)
-
-
-def _normalize_queries(
-    facilities: np.ndarray, qs
-) -> tuple[list[int | np.ndarray], np.ndarray, list[int | None]]:
-    """Split a query batch into per-query build args, points, and excludes."""
-    queries: list[int | np.ndarray] = []
-    q_pts = np.zeros((len(qs), 2), np.float64)
-    excludes: list[int | None] = []
-    for i, q in enumerate(qs):
-        arr = np.asarray(q)
-        if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
-            qi = int(arr)
-            queries.append(qi)
-            q_pts[i] = facilities[qi]
-            excludes.append(qi)
-        else:
-            pt = np.asarray(q, np.float64).reshape(2)
-            queries.append(pt)
-            q_pts[i] = pt
-            excludes.append(None)
-    return queries, q_pts, excludes
+    return eng.query(q, k)
 
 
 def rt_rknn_query_batch(
@@ -261,100 +124,26 @@ def rt_rknn_query_batch(
     ``qs`` is a sequence of facility indices and/or ``[2]`` points.  All
     per-query scenes are built on the host (with ``scene_workers`` threads
     when > 0), padded to one static ``Mp``, and counted in a **single**
-    jitted batched dispatch — the amortization that makes heavy query
-    traffic viable (ROADMAP north star; cf. RT-kNNS Unbound's batched BVH
-    reuse).  Masks are bit-identical to looping :func:`rt_rknn_query`
-    per query (equivalence-tested across all backends).
+    jitted batched dispatch.  Masks are bit-identical to looping
+    :func:`rt_rknn_query` per query (equivalence-tested across all
+    backends).
+
+    One-shot shim; for repeated workloads build an :class:`RkNNEngine`
+    once — its scene cache and prepared-batch LRU then amortize the host
+    filter phase across calls.
     """
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}")
-    facilities = np.asarray(facilities, dtype=np.float64)
-    users = np.asarray(users, dtype=np.float64)
-    qs = list(qs)
-    if not qs:
-        return RkNNBatchResult(
-            masks=np.zeros((0, len(users)), bool),
-            counts=np.zeros((0, len(users)), np.int32),
-            scenes=[],
-            t_filter_s=0.0,
-            t_verify_s=0.0,
-            backend=backend,
-            k=k,
-        )
-    queries, q_pts, excludes = _normalize_queries(facilities, qs)
-
-    if backend == "brute":
-        t0 = time.perf_counter()
-        counts = np.asarray(
-            _ops.rank_count_batch(users, facilities, q_pts, exclude=excludes)
-        )
-        t1 = time.perf_counter()
-        return RkNNBatchResult(
-            counts < k, counts, None, 0.0, t1 - t0, backend, k
-        )
-
-    # ---- filter phase: Q scene builds + padding/stacking + index builds ----
-    t0 = time.perf_counter()
-    if rect is None:
-        # one shared domain rect so scenes (and the grid cell map) align
-        rect = Rect.from_points(facilities, q_pts, users)
-
-    def _one_scene(q):
-        return build_scene(
-            facilities,
-            q,
-            k,
-            rect,
-            strategy=strategy,
-            grid=prune_grid,
-            users_hint=users,
-        )
-
-    if scene_workers > 0 and len(queries) > 1:
-        with concurrent.futures.ThreadPoolExecutor(scene_workers) as pool:
-            scenes = list(pool.map(_one_scene, queries))
-    else:
-        scenes = [_one_scene(q) for q in queries]
-
-    xs = jnp.asarray(users[:, 0], jnp.float32)
-    ys = jnp.asarray(users[:, 1], jnp.float32)
-
-    if backend in ("dense", "dense-ref"):
-        mp = pad_to if pad_to is not None else max(s.tris.shape[0] for s in scenes)
-        coeffs = np.stack(
-            [
-                pad_scene_arrays(
-                    s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], mp
-                )[1]
-                for s in scenes
-            ]
-        ).astype(np.float32)  # [Q, Mp, 3, 3]
-        t1 = time.perf_counter()
-        counts = np.asarray(
-            _ops.raycast_count_batch(
-                xs, ys, coeffs, backend="ref" if backend == "dense-ref" else "pallas"
-            )
-        )
-    elif backend == "grid":
-        grids = [_build_index(s, backend, grid_g) for s in scenes]
-        base, lists, gcoeffs = stack_grids(grids)
-        t1 = time.perf_counter()
-        counts = np.asarray(
-            grid_hit_counts_batch_jnp(xs, ys, base, lists, gcoeffs, rect, grid_g)
-        )
-    elif backend == "bvh":
-        bvhs = [_build_index(s, backend, grid_g) for s in scenes]
-        left, right, bbox, bcoeffs = stack_bvhs(
-            bvhs, [s.coeffs[: s.n_tris] for s in scenes]
-        )
-        t1 = time.perf_counter()
-        counts = np.asarray(
-            bvh_hit_counts_batch(xs, ys, left, right, bbox, bcoeffs, k=k)
-        )
-    else:  # pragma: no cover — BACKENDS guard above
-        raise ValueError(f"unknown backend {backend!r}")
-    t2 = time.perf_counter()
-    return RkNNBatchResult(counts < k, counts, scenes, t1 - t0, t2 - t1, backend, k)
+    eng = _one_shot_engine(
+        facilities,
+        users,
+        backend=backend,
+        strategy=strategy,
+        grid_g=grid_g,
+        prune_grid=prune_grid,
+        rect=rect,
+        pad_to=pad_to,
+        scene_workers=scene_workers,
+    )
+    return eng.query_batch(qs, k)
 
 
 def rknn_mono_query(
@@ -391,14 +180,7 @@ def rknn_mono_query(
     ``>= k``.
     """
     points = np.asarray(points, dtype=np.float64)
-    res = rt_rknn_query(
-        points, points, q_idx, k + 1, backend=backend, strategy=strategy, rect=rect
+    eng = _one_shot_engine(
+        points, points, backend=backend, strategy=strategy, rect=rect
     )
-    counts = np.asarray(res.counts, np.int32).copy()
-    # self-hit correction: every point except q hits its own occluder (q's
-    # occluder is excluded from the scene, so its count is already "others")
-    counts[np.arange(len(counts)) != q_idx] -= 1
-    np.maximum(counts, 0, out=counts)
-    mask = counts < k
-    mask[q_idx] = False
-    return RkNNResult(mask, counts, res.scene, res.t_filter_s, res.t_verify_s, backend)
+    return eng.query_mono(q_idx, k)

@@ -137,6 +137,23 @@ def _raycast_batch_ref_jit(xs, ys, coeffs):
     return _ref.raycast_count_batch_ref(xs, ys, coeffs)
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _raycast_batch_ref_chunked(xs, ys, coeffs, chunk: int = _USER_CHUNK):
+    """Jitted + user-chunked batched oracle: bounds the ``[Q, chunk, M, 3]``
+    broadcast temp the same way the single-query path does, so large user
+    sets don't blow the host heap under a big query batch."""
+    n = xs.shape[0]
+    pad = (-n) % chunk
+    xs_p = jnp.pad(xs, (0, pad))
+    ys_p = jnp.pad(ys, (0, pad))
+    xc = xs_p.reshape(-1, chunk)
+    yc = ys_p.reshape(-1, chunk)
+    out = jax.lax.map(
+        lambda xy: _ref.raycast_count_batch_ref(xy[0], xy[1], coeffs), (xc, yc)
+    )  # [n_chunks, Q, chunk]
+    return jnp.moveaxis(out, 1, 0).reshape(coeffs.shape[0], -1)[:, :n]
+
+
 def raycast_count_batch(
     xs,
     ys,
@@ -161,6 +178,11 @@ def raycast_count_batch(
     if coeffs.ndim != 4:
         raise ValueError(f"coeffs must be [Q, Mp, 3, 3], got {coeffs.shape}")
     if backend == "ref":
+        # keep the [Q, chunk, M, 3] broadcast temp the same size as the
+        # single-query path's [chunk, M, 3] by shrinking chunk with Q
+        chunk = max(1024, _USER_CHUNK // max(int(coeffs.shape[0]), 1))
+        if xs.shape[0] > chunk:
+            return _raycast_batch_ref_chunked(xs, ys, coeffs, chunk=chunk)
         return _raycast_batch_ref_jit(xs, ys, coeffs)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")

@@ -1,48 +1,44 @@
-"""Distributed RkNN serving — the paper's workload as a production service.
+"""Distributed RkNN serving — deprecated alias over the stateful engine.
 
-Design (DESIGN.md §4):
-* the user set is uploaded ONCE, sharded over every data-parallel mesh axis
-  (the paper's "no user index, plain GPU transfer" — Table 2 — generalised
-  to a fleet);
-* queries arrive in batches of ``Q``; scene construction (InfZone-style
-  pruning + occluders, host numpy) runs in a worker thread and is
-  double-buffered against the device ray-cast of the previous batch;
-* the device step is a single pjit'd batched hit-count: users sharded
-  ``P(('pod','data'))``, per-query scenes replicated (they are tiny —
-  ~64 triangles · 36 B), queries sharded over ``'model'`` — zero
-  communication until the final result gather;
-* queries are idempotent, so fault tolerance is re-execution: a lost pod's
-  user shard is re-issued on the surviving mesh (runtime/elastic.py).
+The serving pipeline (users uploaded once and sharded over the mesh's
+data axes, per-query scenes built on the host and double-buffered against
+the device ray-cast, queries sharded over ``'model'``) now lives in
+:class:`repro.core.engine.RkNNEngine` — see docs/API.md for the engine
+lifecycle and the migration table.  :class:`RkNNServer` is kept as a thin
+compatibility wrapper so existing callers keep working; new code should
+construct an engine directly:
+
+    eng = RkNNEngine(F, U, RkNNConfig(scene_cache=256), mesh=mesh)
+    for batch, masks in eng.stream(batches, k=10):
+        ...
+
+Queries are idempotent, so fault tolerance is re-execution: a lost pod's
+user shard is re-issued on the surviving mesh (runtime/elastic.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
-import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.geometry import Rect
-from repro.core.scene import build_scene, pad_scene_arrays
-from repro.distributed.meshctx import dp_axes
+from repro.core.engine import RkNNConfig, RkNNEngine, serve_shardings
 from repro.kernels.ref import raycast_count_batch_ref
 
-__all__ = ["RkNNServer", "batched_raycast_counts", "lower_rknn_serve"]
+__all__ = ["RkNNServer", "ServeStats", "batched_raycast_counts", "lower_rknn_serve"]
 
 
 def batched_raycast_counts(xs, ys, coeffs):
     """counts[q, u] for stacked scenes.  xs/ys: [N]; coeffs: [Q, M, 3, 3].
 
     Delegates to the shared batched oracle in :mod:`repro.kernels.ref` —
-    the same math :func:`repro.core.rknn.rt_rknn_query_batch` dispatches,
-    so the serving path and the query engine cannot drift apart.  Kept as a
-    named function because the server jits it with mesh shardings.
+    the same math every dense dispatch in the engine runs, so the serving
+    path and the query engine cannot drift apart.  Kept as a named function
+    because :func:`lower_rknn_serve` jits it with mesh shardings.
     """
     return raycast_count_batch_ref(xs, ys, coeffs)
 
@@ -56,7 +52,12 @@ class ServeStats:
 
 
 class RkNNServer:
-    """Batched RkNN query server over a (possibly multi-pod) mesh."""
+    """DEPRECATED: thin alias over :class:`RkNNEngine` (docs/API.md).
+
+    Preserved surface: ``query_batch(q_indices, k) -> masks [Q, N]``,
+    ``serve_stream(batches, k)`` (double-buffered generator), and
+    ``stats``.  All state and scheduling live in the engine.
+    """
 
     def __init__(
         self,
@@ -68,121 +69,69 @@ class RkNNServer:
         strategy: str = "infzone",
         scene_cache: int = 0,
     ):
-        self.facilities = np.asarray(facilities, dtype=np.float64)
-        self.users = np.asarray(users, dtype=np.float64)
-        self.rect = Rect.from_points(self.facilities, self.users)
-        self.mesh = mesh
-        self.pad = pad_scene_to
-        self.strategy = strategy
-        self.stats = ServeStats()
-        self._cache = None
-        if scene_cache:  # paper future-work 2: amortize repeated queries
-            from repro.core.hybrid import SceneCache
+        self.engine = RkNNEngine(
+            facilities,
+            users,
+            RkNNConfig(
+                backend="dense-ref",
+                strategy=strategy,
+                scene_cache=scene_cache,
+                pad_scene_to=pad_scene_to,
+            ),
+            mesh=mesh,
+        )
 
-            self._cache = SceneCache(capacity=scene_cache)
+    # engine state passthroughs (legacy attribute surface)
+    @property
+    def facilities(self) -> np.ndarray:
+        return self.engine.facilities
 
-        xs = self.users[:, 0].astype(np.float32)
-        ys = self.users[:, 1].astype(np.float32)
-        if mesh is not None:
-            dp = dp_axes(mesh)
-            user_sh = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
-            scene_sh = NamedSharding(mesh, P("model", None, None, None))
-            out_sh = NamedSharding(mesh, P("model", dp if len(dp) > 1 else dp[0]))
-            # pad user count to the DP degree
-            n = len(xs)
-            dpn = int(np.prod([mesh.shape[a] for a in dp]))
-            padn = (-n) % dpn
-            if padn:
-                xs = np.concatenate([xs, np.full(padn, 2e9, np.float32)])
-                ys = np.concatenate([ys, np.full(padn, 2e9, np.float32)])
-            self._n_real = n
-            self.xs = jax.device_put(xs, user_sh)
-            self.ys = jax.device_put(ys, user_sh)
-            self._step = jax.jit(
-                batched_raycast_counts,
-                in_shardings=(user_sh, user_sh, scene_sh),
-                out_shardings=out_sh,
-            )
-        else:
-            self._n_real = len(xs)
-            self.xs = jnp.asarray(xs)
-            self.ys = jnp.asarray(ys)
-            self._step = jax.jit(batched_raycast_counts)
+    @property
+    def users(self) -> np.ndarray:
+        return self.engine.users
 
-    # -- scene construction (host side, overlappable) ----------------------
-    def _one_scene(self, q: int, k: int):
-        if self._cache is not None:
-            scene, _ = self._cache.get_or_build(
-                self.facilities, int(q), k, self.rect, strategy=self.strategy
-            )
-            return scene
-        return build_scene(self.facilities, int(q), k, self.rect, strategy=self.strategy)
+    @property
+    def rect(self):
+        return self.engine.rect
 
-    def _build_batch(self, q_indices, k: int) -> tuple[np.ndarray, list]:
-        scenes = [self._one_scene(int(q), k) for q in q_indices]
-        mmax = max(s.n_tris for s in scenes)
-        if mmax > self.pad:  # grow the static pad (rare; re-jit once)
-            self.pad = 1 << int(np.ceil(np.log2(mmax)))
-        coeffs = np.stack(
-            [pad_scene_arrays(s.tris[: s.n_tris], s.coeffs[: s.n_tris], s.owner[: s.n_tris], self.pad)[1] for s in scenes]
-        )  # [Q, pad, 3, 3]
-        return coeffs.astype(np.float32), scenes
+    @property
+    def mesh(self):
+        return self.engine.mesh
 
-    # -- serving -------------------------------------------------------------
+    @property
+    def strategy(self) -> str:
+        return self.engine.config.strategy
+
+    @property
+    def pad(self) -> int:
+        return self.engine._pad_bucket
+
+    @property
+    def stats(self) -> ServeStats:
+        s = self.engine.stats
+        return ServeStats(
+            n_queries=s.n_queries,
+            t_scene_s=s.t_filter_s,
+            t_device_s=s.t_verify_s,
+            m_max=s.m_max,
+        )
+
     def query_batch(self, q_indices, k: int) -> np.ndarray:
         """Masks [Q, N] for a batch of facility-index queries."""
-        t0 = time.perf_counter()
-        coeffs, scenes = self._build_batch(q_indices, k)
-        t1 = time.perf_counter()
-        counts = np.asarray(self._step(self.xs, self.ys, jnp.asarray(coeffs)))
-        t2 = time.perf_counter()
-        self.stats.n_queries += len(q_indices)
-        self.stats.t_scene_s += t1 - t0
-        self.stats.t_device_s += t2 - t1
-        self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
-        return counts[:, : self._n_real] < k
+        return self.engine.query_batch([int(q) for q in q_indices], k).masks
 
     def serve_stream(self, batches, k: int):
         """Double-buffered stream: scene build for batch i+1 overlaps the
-        device ray-cast of batch i (generator of [Q, N] masks)."""
-        q: "queue.Queue" = queue.Queue(maxsize=2)
-
-        def producer():
-            try:
-                for b in batches:
-                    t0 = time.perf_counter()
-                    built = self._build_batch(b, k)
-                    self.stats.t_scene_s += time.perf_counter() - t0
-                    q.put((b, built))
-                q.put(None)
-            except BaseException as e:  # surface in the consumer, no deadlock
-                q.put(e)
-
-        t = threading.Thread(target=producer, daemon=True)
-        t.start()
-        while True:
-            item = q.get()
-            if item is None:
-                return
-            if isinstance(item, BaseException):
-                raise item
-            b, (coeffs, scenes) = item
-            t0 = time.perf_counter()
-            counts = np.asarray(self._step(self.xs, self.ys, jnp.asarray(coeffs)))
-            self.stats.t_device_s += time.perf_counter() - t0
-            self.stats.n_queries += len(b)
-            self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
-            yield b, counts[:, : self._n_real] < k
+        device ray-cast of batch i (generator of [Q, N] masks).  Producer
+        exceptions re-raise in the consumer."""
+        return self.engine.stream(batches, k)
 
 
 def lower_rknn_serve(mesh: Mesh, n_users: int, q_batch: int, m_pad: int = 128):
     """Dry-run lowering of the serve step on a production mesh (the RkNN
-    analogue of the LM cells; exercised in tests + EXPERIMENTS §Dry-run)."""
-    dp = dp_axes(mesh)
-    dp_spec = dp if len(dp) > 1 else dp[0]
-    user_sh = NamedSharding(mesh, P(dp_spec))
-    scene_sh = NamedSharding(mesh, P("model", None, None, None))
-    out_sh = NamedSharding(mesh, P("model", dp_spec))
+    analogue of the LM cells; exercised in tests + EXPERIMENTS §Dry-run).
+    Uses the same partition layout the live engine dispatches with."""
+    user_sh, scene_sh, out_sh = serve_shardings(mesh)
     xs = jax.ShapeDtypeStruct((n_users,), jnp.float32)
     cf = jax.ShapeDtypeStruct((q_batch, m_pad, 3, 3), jnp.float32)
     return (

@@ -124,6 +124,44 @@ def test_dryrun_8dev_subprocess(arch):
     assert payload["coll"] > 0 and payload["n_coll"] > 0
 
 
+_ENGINE_MESH_8DEV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.core.brute import rknn_brute_np
+    from repro.core.engine import RkNNEngine
+    from repro.launch.mesh import make_mesh_for_devices
+
+    rng = np.random.default_rng(0)
+    F, U = rng.random((40, 2)), rng.random((257, 2))  # 257 % dp_degree != 0
+    mesh = make_mesh_for_devices(8, model_axis=2)     # data=4, model=2
+    eng = RkNNEngine(F, U, mesh=mesh)
+    qs = [3, 7, 11, 19]
+    res = eng.query_batch(qs, 5)
+    assert res.masks.shape == (4, 257), res.masks.shape
+    for i, qi in enumerate(qs):
+        assert np.array_equal(res.masks[i], rknn_brute_np(U, F, qi, 5)), qi
+    print("OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_engine_mesh_8dev_subprocess():
+    """The engine's pjit'd dense-ref dispatch on a real 8-device (host
+    platform) mesh: users sharded over 'data' with sentinel padding (the
+    user count is not a multiple of the DP degree), queries over 'model' —
+    masks exact vs the brute oracle."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", _ENGINE_MESH_8DEV],
+        capture_output=True, text=True, env=env, timeout=480,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.strip().endswith("OK")
+
+
 def test_rknn_serve_lowering_small_mesh():
     """The paper-workload serve step lowers on a small mesh in-process."""
     from repro.launch.mesh import make_mesh_for_devices

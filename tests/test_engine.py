@@ -1,0 +1,350 @@
+"""The stateful RkNNEngine and its pluggable backend registry.
+
+Covers the engine-PR acceptance surface:
+
+* engine ↔ free-function equivalence: masks AND counts bit-identical
+  across all five registered backends, single + batch + mono;
+* scene-cache amortization visible in ``t_filter_s`` on the batched path;
+* ``stream()`` / ``serve_stream`` re-raise producer exceptions instead of
+  hanging;
+* empty-batch normalization (``scenes`` is None for brute, a list for
+  geometric backends, in both the empty and non-empty cases);
+* registry behaviour: unknown names raise, custom backends plug in
+  without touching any dispatch ladder.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import (
+    Backend,
+    BruteBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    _REGISTRY,
+)
+from repro.core.brute import rknn_brute_np, rknn_mono_brute_np
+from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.core.rknn import (
+    BACKENDS,
+    rknn_mono_query,
+    rt_rknn_query,
+    rt_rknn_query_batch,
+)
+from repro.launch.serve import RkNNServer
+
+
+def _instance(seed, M=50, N=300):
+    rng = np.random.default_rng(seed)
+    return rng.random((M, 2)), rng.random((N, 2)), rng
+
+
+# ---------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_matches_free_functions_single_and_batch(backend):
+    F, U, rng = _instance(3)
+    eng = RkNNEngine(F, U, RkNNConfig(backend=backend))
+    qs = [int(q) for q in rng.integers(0, len(F), 5)] + [np.array([0.4, 0.6])]
+    k = 4
+    batch_eng = eng.query_batch(qs, k)
+    batch_free = rt_rknn_query_batch(F, U, qs, k, backend=backend)
+    np.testing.assert_array_equal(batch_eng.masks, batch_free.masks)
+    np.testing.assert_array_equal(batch_eng.counts, batch_free.counts)
+    for i, q in enumerate(qs):
+        single_eng = eng.query(q, k)
+        single_free = rt_rknn_query(F, U, q, k, backend=backend)
+        np.testing.assert_array_equal(single_eng.mask, single_free.mask)
+        np.testing.assert_array_equal(single_eng.counts, single_free.counts)
+        np.testing.assert_array_equal(batch_eng.masks[i], single_eng.mask)
+        np.testing.assert_array_equal(batch_eng.counts[i], single_eng.counts)
+        if not isinstance(q, np.ndarray):
+            np.testing.assert_array_equal(
+                single_eng.mask, rknn_brute_np(U, F, q, k)
+            )
+
+
+@pytest.mark.parametrize("backend", ["dense-ref", "grid", "bvh", "brute"])
+def test_engine_mono_matches_free_function(backend):
+    P = np.random.default_rng(17).random((60, 2))
+    eng = RkNNEngine(P, P, RkNNConfig(backend=backend))
+    for qi, k in ((5, 3), (20, 1)):
+        a = eng.query_mono(qi, k)
+        b = rknn_mono_query(P, qi, k, backend=backend)
+        np.testing.assert_array_equal(a.mask, b.mask)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.mask, rknn_mono_brute_np(P, qi, k))
+
+
+def test_engine_mono_from_bichromatic_engine():
+    """query_mono on an engine whose users ≠ facilities runs over the
+    facility set via a lazily created sub-engine — which inherits an
+    explicit rect and mirrors its work into the outer engine's stats."""
+    from repro.core.geometry import Rect
+
+    F, U, _ = _instance(23)
+    eng = RkNNEngine(F, U)
+    res = eng.query_mono(4, 3)
+    np.testing.assert_array_equal(res.mask, rknn_mono_brute_np(F, 4, 3))
+    assert eng.stats.n_queries == 1 and eng.stats.t_verify_s > 0.0
+
+    rect = Rect(-0.5, -0.5, 1.5, 1.5)
+    eng_r = RkNNEngine(F, U, rect=rect)
+    res_r = eng_r.query_mono(4, 3)
+    assert res_r.scene.rect == rect
+    np.testing.assert_array_equal(res_r.mask, rknn_mono_brute_np(F, 4, 3))
+
+
+# ------------------------------------------------------------- amortization
+def test_scene_cache_amortizes_batch_filter_phase():
+    F, U, rng = _instance(31, M=120, N=2000)
+    qs = [int(q) for q in rng.integers(0, len(F), 8)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="dense-ref", batch_cache=0))
+    cold = eng.query_batch(qs, 5)
+    assert eng.scene_cache.misses == len(set(qs))
+    warm = eng.query_batch(qs, 5)
+    # hot queries skip the host scene build: cache hits, collapsed filter
+    assert eng.scene_cache.hits >= len(qs)
+    assert warm.t_filter_s < cold.t_filter_s
+    np.testing.assert_array_equal(cold.masks, warm.masks)
+
+
+def test_batch_cache_collapses_repeat_workload():
+    F, U, rng = _instance(37)
+    qs = [int(q) for q in rng.integers(0, len(F), 6)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="grid"))
+    a = eng.query_batch(qs, 4)
+    b = eng.query_batch(qs, 4)
+    assert eng.stats.batch_cache_hits == 1
+    assert b.t_filter_s < a.t_filter_s
+    np.testing.assert_array_equal(a.masks, b.masks)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    # a different k is a different workload — no false sharing
+    c = eng.query_batch(qs, 5)
+    assert eng.stats.batch_cache_hits == 1
+    np.testing.assert_array_equal(c.masks, rt_rknn_query_batch(F, U, qs, 5, backend="grid").masks)
+
+
+def test_batch_reuses_memoized_scene_indexes():
+    """Scene-cache hits carry their grid/BVH index across batches: a second
+    batch with a different composition must not rebuild indexes for scenes
+    it already saw (the per-scene memo is keyed on the scene object)."""
+    F, U, rng = _instance(97, M=80)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="grid", batch_cache=0))
+    eng.query_batch([1, 2, 3], 4)
+    scene1 = eng.scene_cache.get_or_build(F, 1, 4, eng.rect)[0]
+    memo = getattr(scene1, "_engine_indexes")
+    assert ("grid", eng.config.grid_g) in memo
+    idx_before = memo[("grid", eng.config.grid_g)]
+    res = eng.query_batch([1, 5], 4)  # new composition, scene 1 cached
+    assert memo[("grid", eng.config.grid_g)] is idx_before
+    np.testing.assert_array_equal(
+        res.masks, rt_rknn_query_batch(F, U, [1, 5], 4, backend="grid").masks
+    )
+
+
+def test_pad_bucket_is_sticky_power_of_two():
+    F, U, rng = _instance(41, M=80)
+    eng = RkNNEngine(F, U)
+    eng.query_batch([0, 1, 2], 3)
+    b1 = eng._pad_bucket
+    assert b1 & (b1 - 1) == 0  # power of two
+    eng.query_batch([3, 4], 2)
+    assert eng._pad_bucket >= b1  # never shrinks → jit traces are reused
+
+
+# ------------------------------------------------------------------ stream
+def test_stream_matches_batch_and_counts_stats():
+    F, U, rng = _instance(43)
+    eng = RkNNEngine(F, U)
+    batches = [np.array([1, 2, 3]), np.array([4, 5])]
+    seen = {}
+    for i, (qb, masks) in enumerate(eng.stream(batches, 4)):
+        assert qb is batches[i]  # the original batch object is yielded back
+        for qi, m in zip(qb, masks):
+            seen[int(qi)] = m
+    assert eng.stats.n_queries == 5
+    for qi, m in seen.items():
+        np.testing.assert_array_equal(m, rknn_brute_np(U, F, qi, 4))
+
+
+def test_stream_reraises_producer_exception():
+    F, U, _ = _instance(47)
+    eng = RkNNEngine(F, U)
+
+    def bad_batches():
+        yield [0, 1]
+        raise RuntimeError("batch source failed")
+
+    stream = eng.stream(bad_batches(), 3)
+    next(stream)  # first batch is fine
+    with pytest.raises(RuntimeError, match="batch source failed"):
+        for _ in stream:
+            pass
+
+
+def test_serve_stream_alias_reraises_producer_exception():
+    F, U, _ = _instance(53)
+    server = RkNNServer(F, U)
+
+    def bad_batches():
+        raise ValueError("upstream queue died")
+        yield  # pragma: no cover
+
+    with pytest.raises(ValueError, match="upstream queue died"):
+        for _ in server.serve_stream(bad_batches(), 3):
+            pass
+
+
+def test_stream_bad_query_index_reraises():
+    """A failing scene build inside the producer thread must surface."""
+    F, U, _ = _instance(59, M=20)
+    eng = RkNNEngine(F, U)
+    with pytest.raises(IndexError):
+        for _ in eng.stream([[0], [len(F) + 5]], 3):
+            pass
+
+
+# ------------------------------------------------------- empty-batch contract
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_batch_normalized(backend):
+    F, U, _ = _instance(61, M=20)
+    empty = rt_rknn_query_batch(F, U, [], 3, backend=backend)
+    assert empty.masks.shape == (0, len(U))
+    assert empty.counts.shape == (0, len(U))
+    assert empty.counts.dtype == np.int32
+    nonempty = rt_rknn_query_batch(F, U, [0, 1], 3, backend=backend)
+    if backend == "brute":
+        # geometry-free: never a scenes list, empty or not
+        assert empty.scenes is None and nonempty.scenes is None
+        assert nonempty.per_query(0).scene is None
+    else:
+        assert empty.scenes == [] and len(nonempty.scenes) == 2
+        assert nonempty.per_query(0).scene is nonempty.scenes[0]
+
+
+# ------------------------------------------------------------------ registry
+def test_get_backend_unknown_raises():
+    with pytest.raises(ValueError, match="backend must be one of"):
+        get_backend("voxel")
+    with pytest.raises(ValueError):
+        RkNNEngine(np.zeros((4, 2)), np.zeros((4, 2)), RkNNConfig(backend="voxel"))
+    with pytest.raises(ValueError):
+        rt_rknn_query(np.random.rand(5, 2), np.random.rand(9, 2), 0, 1, backend="nope")
+
+
+def test_builtin_registration_order():
+    assert available_backends()[:5] == ("dense", "dense-ref", "grid", "bvh", "brute")
+    assert BACKENDS == ("dense", "dense-ref", "grid", "bvh", "brute")
+
+
+def test_custom_backend_plugs_into_engine():
+    calls = {"n": 0}
+
+    @register_backend
+    class CountingBrute(BruteBackend):
+        name = "brute-counting"
+
+        def count(self, req):
+            calls["n"] += 1
+            return super().count(req)
+
+    try:
+        assert "brute-counting" in available_backends()
+        F, U, _ = _instance(67)
+        eng = RkNNEngine(F, U, RkNNConfig(backend="brute-counting"))
+        res = eng.query(2, 3)
+        assert calls["n"] == 1
+        np.testing.assert_array_equal(res.mask, rknn_brute_np(U, F, 2, 3))
+        assert res.backend == "brute-counting"
+    finally:
+        _REGISTRY.pop("brute-counting", None)
+
+
+def test_backend_protocol_defaults():
+    class Noop(Backend):
+        name = "noop-test"
+
+    b = Noop()
+    assert b.build_index(None) is None
+    assert b.prepare_batch(None) is None
+    with pytest.raises(NotImplementedError):
+        b.count(None)
+    with pytest.raises(NotImplementedError):
+        b.count_batch(None, None)
+
+
+# ------------------------------------------------------------------ mesh path
+def test_engine_mesh_sharded_dense_dispatch():
+    """With a mesh, dense-ref batch/stream dispatch goes through the pjit'd
+    step (users sharded over data axes, queries over 'model') and stays
+    bit-identical to the meshless engine."""
+    from repro.launch.mesh import make_mesh_for_devices
+
+    F, U, rng = _instance(83, M=40, N=257)
+    mesh = make_mesh_for_devices(1, model_axis=1)
+    eng_mesh = RkNNEngine(F, U, mesh=mesh)
+    eng_plain = RkNNEngine(F, U)
+    qs = [int(q) for q in rng.integers(0, len(F), 4)]
+    a = eng_mesh.query_batch(qs, 5)
+    b = eng_plain.query_batch(qs, 5)
+    np.testing.assert_array_equal(a.masks, b.masks)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    for qi in qs:
+        np.testing.assert_array_equal(
+            a.masks[qs.index(qi)], rknn_brute_np(U, F, qi, 5)
+        )
+    # stream goes through the same sharded dispatch
+    for qb, masks in eng_mesh.stream([qs], 5):
+        np.testing.assert_array_equal(masks, b.masks)
+    # non-dense backends fall back to the unsharded dispatch
+    g = eng_mesh.query_batch(qs, 5, backend="grid")
+    np.testing.assert_array_equal(g.masks, b.masks)
+
+
+# ------------------------------------------------------------ kernel wrappers
+def test_batched_ref_user_chunking_is_exact():
+    """The user-chunked batched oracle path (large N) matches the unchunked
+    one bit-for-bit, including when N is not a multiple of the chunk."""
+    from repro.kernels.ops import _raycast_batch_ref_chunked, raycast_count_batch
+
+    rng = np.random.default_rng(79)
+    xs = rng.random(101).astype(np.float32)
+    ys = rng.random(101).astype(np.float32)
+    F, _, _ = _instance(79, M=12)
+    from repro.core.scene import build_scene
+
+    scenes = [build_scene(F, qi, 3) for qi in (0, 1, 2)]
+    coeffs = np.stack([s.coeffs for s in scenes]).astype(np.float32)
+    full = np.asarray(raycast_count_batch(xs, ys, coeffs, backend="ref"))
+    chunked = np.asarray(_raycast_batch_ref_chunked(xs, ys, coeffs, chunk=16))
+    np.testing.assert_array_equal(full, chunked)
+
+
+# ---------------------------------------------------------------- rect edges
+def test_engine_handles_out_of_hull_point_queries():
+    """A query point outside the facility∪user hull extends the domain rect
+    for that call only (bit-compatible with the old per-call rect)."""
+    F, U, _ = _instance(71)
+    eng = RkNNEngine(F, U)
+    q_out = np.array([1.5, 1.7])
+    res = eng.query(q_out, 4)
+    np.testing.assert_array_equal(res.mask, rknn_brute_np(U, F, q_out, 4))
+    free = rt_rknn_query(F, U, q_out, 4)
+    np.testing.assert_array_equal(res.mask, free.mask)
+    np.testing.assert_array_equal(res.counts, free.counts)
+    # shared rect unchanged for subsequent in-hull queries
+    res_in = eng.query(0, 4)
+    np.testing.assert_array_equal(res_in.mask, rknn_brute_np(U, F, 0, 4))
+
+
+def test_explicit_rect_is_respected():
+    from repro.core.geometry import Rect
+
+    F, U, _ = _instance(73)
+    rect = Rect(-1.0, -1.0, 2.0, 2.0)
+    eng = RkNNEngine(F, U, rect=rect)
+    res = eng.query(1, 3)
+    assert res.scene.rect == rect
+    free = rt_rknn_query(F, U, 1, 3, rect=rect)
+    np.testing.assert_array_equal(res.counts, free.counts)
