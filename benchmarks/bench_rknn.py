@@ -373,6 +373,109 @@ def engine_amortization(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> lis
     return rows
 
 
+# ------------------------------------------- planner scenario sweep (ours)
+def scenario_sweep(
+    scale: float = DEFAULT_SCALE, n_queries: int = 0, backend: str = "auto"
+) -> list[dict]:
+    """The planner's report card: ``auto`` vs every fixed backend per regime.
+
+    Calibrates a fast on-hardware profile, activates it, then runs every
+    scenario in :mod:`repro.workloads` through a *stateful engine* per
+    backend — one cold call (jit + caches), one timed warm call.  Warm is
+    the serving regime the engine exists for (hot facilities queried over
+    and over; scene cache + prepared-batch LRU active), and the regime
+    where the paper's backend frontier is about verify cost, which is what
+    the planner prices.  Acceptance criteria (ISSUE 3): per regime,
+    ``backend`` (default ``auto``) is within 10% of the best fixed
+    backend (``within10``); on the aggregate sweep it beats every single
+    fixed backend (``beats_all``).  ``chosen`` surfaces the planner's
+    ``explain()`` decisions; masks are asserted identical across all
+    backends.
+
+    The fixed set covers every timeable deployment backend; interpret-
+    mode ``dense`` is excluded per the suite's timing convention (see
+    ``benchmarks/common.py``: it is a correctness tool, ``dense-ref`` is
+    the timed RT execution on CPU).  The planner still prices all five —
+    when calibration measures ``dense`` as genuinely fastest on this
+    runtime, ``auto`` exploiting it is the planner working as intended.
+    """
+    import collections
+
+    from repro.core.backends import get_backend
+    from repro.planner.calibrate import calibrate
+    from repro.planner.profiles import get_active_profile, set_active_profile
+    from repro.workloads import SCENARIOS
+
+    fixed = ("dense-ref", "grid", "bvh", "brute")
+    prev = get_active_profile()
+    t0 = time.perf_counter()
+    profile = calibrate(fast=True, repeats=2)
+    t_cal = time.perf_counter() - t0
+    set_active_profile(profile)
+    rows = []
+    try:
+        contenders = fixed if backend in fixed else fixed + (backend,)
+        others = tuple(b for b in fixed if b != backend)
+        totals = {b: 0.0 for b in contenders}
+        total_q = 0
+        chosen_all: collections.Counter = collections.Counter()
+        for name, sc in SCENARIOS.items():
+            w = sc.generate(scale)
+            qs, k = w.qs, w.k
+            times = {}
+            masks = {}
+            for b in contenders:
+                eng = RkNNEngine(w.facilities, w.users, RkNNConfig(backend=b))
+                eng.query_batch(qs, k)  # cold: jit warmup + cache fill
+                best_t = np.inf
+                for _ in range(3):  # best-of-3 warm calls (noise floor)
+                    t0 = time.perf_counter()
+                    r = eng.query_batch(qs, k)
+                    best_t = min(best_t, time.perf_counter() - t0)
+                times[b] = best_t
+                masks[b] = r.masks
+                totals[b] += times[b]
+            for b in fixed:
+                assert np.array_equal(masks[backend], masks[b]), (name, b)
+            plan = get_backend("auto").explain() if backend == "auto" else None
+            chosen = collections.Counter(
+                plan.get("assignments", [plan.get("backend", "?")])
+                if plan
+                else [backend]
+            )
+            chosen_all.update(chosen)
+            total_q += len(qs)
+            best = min(others or (backend,), key=lambda b: times[b])
+            ratio = times[backend] / times[best]
+            rows.append(
+                dict(
+                    name=f"scenario_{name}_{backend}",
+                    us_per_call=times[backend] / len(qs) * 1e6,
+                    derived=(
+                        f"best={best}:{times[best]*1e3:.1f}ms "
+                        f"auto/best={ratio:.2f}x within10={ratio <= 1.10} "
+                        f"chosen={dict(chosen)} "
+                        + " ".join(f"{b}={times[b]*1e3:.1f}ms" for b in others)
+                    ),
+                )
+            )
+        beats_all = all(totals[backend] < totals[b] for b in others)
+        rows.append(
+            dict(
+                name=f"scenario_aggregate_{backend}",
+                us_per_call=totals[backend] / max(total_q, 1) * 1e6,
+                derived=(
+                    f"beats_all={beats_all} chosen={dict(chosen_all)} "
+                    + " ".join(f"{b}={totals[b]*1e3:.0f}ms" for b in others)
+                    + f" calibration={t_cal:.1f}s"
+                ),
+            )
+        )
+    finally:
+        set_active_profile(prev)
+    return rows
+
+
 # ------------------------------------------------- monochromatic (paper §4.5)
 def mono_queries(scale: float = DEFAULT_SCALE, n_queries: int = 3) -> list[dict]:
     """Monochromatic RkNN (facilities querying facilities): the paper

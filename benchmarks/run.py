@@ -1,7 +1,7 @@
 """Benchmark harness — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig9] \
-        [--json out.json]
+        [--json out.json] [--backend auto]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measured artefact).
 ``--scale 1.0`` reproduces the paper's dataset cardinalities (minutes to
@@ -9,11 +9,15 @@ hours on CPU); the default keeps CI fast while preserving every comparison.
 ``--json`` additionally writes the rows as machine-readable JSON
 (``{"meta": {...}, "rows": [...]}``) so CI and future PRs can append
 trajectory points (``BENCH_*.json``) without re-parsing CSV.
+``--backend`` is forwarded to the benches that take one (currently the
+planner's ``scenario_sweep``, which grades that backend against the fixed
+set).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import platform
 import sys
@@ -35,6 +39,7 @@ BENCHES = [
     ("backends", bench_rknn.backends_ablation),
     ("batch", bench_rknn.batch_throughput),
     ("engine", bench_rknn.engine_amortization),
+    ("scenario_sweep", bench_rknn.scenario_sweep),
     ("mono", bench_rknn.mono_queries),
 ]
 
@@ -49,6 +54,11 @@ def main() -> None:
         metavar="OUT",
         help="also write rows as machine-readable JSON to this path",
     )
+    ap.add_argument(
+        "--backend",
+        default=None,
+        help="backend name forwarded to benches that accept one",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -58,8 +68,11 @@ def main() -> None:
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
+        kw = {"scale": args.scale}
+        if args.backend and "backend" in inspect.signature(fn).parameters:
+            kw["backend"] = args.backend
         try:
-            rows = fn(scale=args.scale)
+            rows = fn(**kw)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name}_ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
             errors.append(dict(bench=name, error=f"{type(e).__name__}: {e}"))
@@ -81,6 +94,7 @@ def main() -> None:
             meta=dict(
                 scale=args.scale,
                 only=args.only,
+                backend=args.backend,
                 wall_s=round(wall, 3),
                 python=platform.python_version(),
                 platform=platform.platform(),

@@ -4,6 +4,7 @@ Public surface:
   * :class:`repro.core.engine.RkNNEngine` — stateful query engine (build
     once from ``(facilities, users, RkNNConfig)``; query/batch/mono/stream)
   * :mod:`repro.core.backends` — pluggable verification backend registry
+    (including the ``"auto"`` planner backend; see :mod:`repro.planner`)
   * :func:`repro.core.rknn.rt_rknn_query` — one-shot bichromatic RkNN shim
   * :func:`repro.core.rknn.rt_rknn_query_batch` — one-shot batched shim
   * :func:`repro.core.rknn.rknn_mono_query` — monochromatic variant
@@ -16,6 +17,7 @@ Lifecycle, config knobs, and the free-function migration table: docs/API.md.
 from repro.core.backends import (
     Backend,
     available_backends,
+    concrete_backends,
     get_backend,
     register_backend,
 )
@@ -42,6 +44,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "concrete_backends",
     "rt_rknn_query",
     "rt_rknn_query_batch",
     "rknn_mono_query",

@@ -25,6 +25,10 @@ Built-in backends (all produce identical verdict sets — property-tested):
 * ``"grid"``     — uniform-grid culled counting (TPU BVH analogue).
 * ``"bvh"``      — paper-faithful LBVH traversal with early termination.
 * ``"brute"``    — exact distance-rank counting (no geometry; baseline).
+* ``"auto"``     — the query planner (:mod:`repro.planner.backend`): a
+                   *meta* backend (``is_meta = True``) that cost-dispatches
+                   every request to the predicted-cheapest concrete backend
+                   using the active calibration profile.
 """
 
 from __future__ import annotations
@@ -54,11 +58,13 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "concrete_backends",
     "DenseBackend",
     "DenseRefBackend",
     "GridBackend",
     "BvhBackend",
     "BruteBackend",
+    "PlannerBackend",
 ]
 
 
@@ -88,9 +94,10 @@ class BatchRequest:
 
     ``mp`` is the static triangle pad target for stacked dense scenes
     (power-of-two bucketed by the engine so repeat workloads reuse one jit
-    trace).  ``dense_dispatch`` optionally overrides the dense device step
-    — the engine injects its persistent (possibly mesh-sharded) jitted
-    dispatch here.
+    trace).  ``dispatch`` optionally overrides the device step: a callable
+    taking the prepared batch state and returning ``[Q, N]`` counts — the
+    engine injects its persistent mesh-sharded jitted dispatch here (for
+    the dense-ref, grid, and bvh batched paths alike).
     """
 
     xs: jnp.ndarray  # [N] f32
@@ -105,7 +112,7 @@ class BatchRequest:
     q_pts: np.ndarray | None = None  # [Q, 2]
     excludes: list[int | None] | None = None
     mp: int | None = None
-    dense_dispatch: Callable | None = None
+    dispatch: Callable | None = None
 
 
 class Backend:
@@ -115,6 +122,10 @@ class Backend:
     #: False for geometry-free backends (no scene construction at all);
     #: the engine skips the whole filter phase for them.
     uses_scene: ClassVar[bool] = True
+    #: True for planning backends that only *route* to concrete backends
+    #: (the engine resolves them before filtering; they are excluded from
+    #: the concrete-backend lists like ``repro.core.rknn.BACKENDS``).
+    is_meta: ClassVar[bool] = False
 
     # ---- filter phase (host) --------------------------------------------
     def build_index(self, scene: Scene, *, grid_g: int = 64):
@@ -162,6 +173,13 @@ def available_backends() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def concrete_backends() -> tuple[str, ...]:
+    """Registered names that do the counting themselves — meta backends
+    (the ``auto`` planner) route to these and are excluded.  Single source
+    of truth for every "all real backends" list."""
+    return tuple(n for n, b in _REGISTRY.items() if not b.is_meta)
+
+
 # --------------------------------------------------------------------------
 # Dense (stacked edge functions, no index)
 # --------------------------------------------------------------------------
@@ -194,8 +212,8 @@ class DenseBackend(Backend):
         ).astype(np.float32)  # [Q, Mp, 3, 3]
 
     def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
-        if req.dense_dispatch is not None:
-            return np.asarray(req.dense_dispatch(req.xs, req.ys, prepared))
+        if req.dispatch is not None:
+            return np.asarray(req.dispatch(prepared))
         return np.asarray(
             _ops.raycast_count_batch(
                 req.xs, req.ys, prepared, backend=self.kernel_backend
@@ -245,6 +263,8 @@ class GridBackend(Backend):
         return stack_grids(indexes)  # (base, lists, coeffs)
 
     def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        if req.dispatch is not None:
+            return np.asarray(req.dispatch(prepared))
         base, lists, coeffs = prepared
         return np.asarray(
             grid_hit_counts_batch_jnp(
@@ -288,6 +308,8 @@ class BvhBackend(Backend):
         return stack_bvhs(indexes, [s.coeffs[: s.n_tris] for s in req.scenes])
 
     def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        if req.dispatch is not None:
+            return np.asarray(req.dispatch(prepared))
         left, right, bbox, coeffs = prepared
         return np.asarray(
             bvh_hit_counts_batch(req.xs, req.ys, left, right, bbox, coeffs, k=req.k)
@@ -317,3 +339,15 @@ class BruteBackend(Backend):
                 req.users, req.facilities, req.q_pts, exclude=req.excludes
             )
         )
+
+
+# --------------------------------------------------------------------------
+# Auto (the query planner — registered last so concrete backends come first)
+# --------------------------------------------------------------------------
+
+from repro.planner.backend import PlannerBackend  # noqa: E402 — deliberate tail
+                                                  # import; the planner module
+                                                  # has no core imports at
+                                                  # module level (acyclic)
+
+register_backend(PlannerBackend)

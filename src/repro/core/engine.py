@@ -53,6 +53,7 @@ from repro.core.geometry import Rect
 from repro.core.hybrid import SceneCache, _q_key
 from repro.core.results import RkNNBatchResult, RkNNResult
 from repro.core.scene import Scene, build_scene
+from repro.planner.models import WorkloadShape
 
 __all__ = ["RkNNConfig", "EngineStats", "RkNNEngine", "serve_shardings"]
 
@@ -99,7 +100,13 @@ class RkNNConfig:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Cumulative counters over the engine's lifetime."""
+    """Cumulative counters over the engine's lifetime.
+
+    The ``planner_*`` fields only move when queries route through the
+    ``auto`` backend: per-backend dispatch counts and the running
+    predicted-vs-observed cost totals (the planner's calibration error is
+    ``planner_obs_s / planner_pred_s`` drifting from 1).
+    """
 
     n_queries: int = 0
     n_batches: int = 0
@@ -107,6 +114,9 @@ class EngineStats:
     t_verify_s: float = 0.0
     m_max: int = 0
     batch_cache_hits: int = 0
+    planner_decisions: dict = dataclasses.field(default_factory=dict)
+    planner_pred_s: float = 0.0
+    planner_obs_s: float = 0.0
 
 
 def _next_pow2(n: int) -> int:
@@ -178,7 +188,10 @@ class RkNNEngine:
         self._xs = self._ys = None  # lazy device arrays
         self._mono: "RkNNEngine | None" = None
         self._is_mono: bool | None = None
-        self._mesh_step = None
+        self._mesh_steps: dict = {}  # (backend, statics) -> jitted dispatch
+        self._mesh_xs = self._mesh_ys = None
+        self._mesh_n = 0
+        self._plan_log: "collections.deque[dict]" = collections.deque(maxlen=128)
         if mesh is not None:
             self._init_mesh(mesh)
 
@@ -228,14 +241,15 @@ class RkNNEngine:
         return self._fp
 
     # ------------------------------------------------------------------
-    # mesh-sharded dense dispatch (absorbed from launch/serve.py)
+    # mesh-sharded batch dispatches (absorbed from launch/serve.py)
     # ------------------------------------------------------------------
     def _init_mesh(self, mesh) -> None:
+        """Upload the (DP-padded) user coordinates once, sharded over the
+        data axes; per-backend jitted dispatches are built lazily."""
         from repro.distributed.meshctx import dp_axes
-        from repro.kernels.ref import raycast_count_batch_ref
 
         dp = dp_axes(mesh)
-        user_sh, scene_sh, out_sh = serve_shardings(mesh)
+        user_sh, _scene_sh, _out_sh = serve_shardings(mesh)
         xs = self.users[:, 0].astype(np.float32)
         ys = self.users[:, 1].astype(np.float32)
         n = len(xs)
@@ -244,24 +258,116 @@ class RkNNEngine:
         if padn:  # sentinel users far outside every scene; sliced off below
             xs = np.concatenate([xs, np.full(padn, 2e9, np.float32)])
             ys = np.concatenate([ys, np.full(padn, 2e9, np.float32)])
-        mesh_xs = jax.device_put(xs, user_sh)
-        mesh_ys = jax.device_put(ys, user_sh)
-        step = jax.jit(
-            raycast_count_batch_ref,
-            in_shardings=(user_sh, user_sh, scene_sh),
-            out_shardings=out_sh,
-        )
+        self._mesh_xs = jax.device_put(xs, user_sh)
+        self._mesh_ys = jax.device_put(ys, user_sh)
+        self._mesh_n = n
 
-        def dispatch(_xs, _ys, coeffs):
-            return np.asarray(step(mesh_xs, mesh_ys, jnp.asarray(coeffs)))[:, :n]
+    def _mesh_q_sharding(self, ndim: int):
+        """NamedSharding for a per-query stacked array: queries over
+        ``'model'``, trailing dims replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-        self._mesh_step = dispatch
+        return NamedSharding(self.mesh, P("model", *([None] * (ndim - 1))))
 
-    def _dense_dispatch_for(self, backend: Backend):
-        """Engine-held dispatch override: the mesh-sharded pjit step runs
-        the ref math, so only the dense-ref backend routes through it."""
-        if self._mesh_step is not None and backend.name == "dense-ref":
-            return self._mesh_step
+    def _mesh_dispatch_for(self, backend: Backend, *, rect: Rect, k: int):
+        """Engine-held device-dispatch override for ``count_batch``.
+
+        The dense-ref, grid, and bvh batched paths all shard the same way
+        (users over the data axes, queries over ``'model'``; the per-query
+        stacked index state is tiny).  The jitted step is cached per
+        backend and per the statics its math closes over — the domain rect
+        and G for the grid, ``k`` for the bvh early exit.  ``dense``
+        (interpret-mode Pallas) and ``brute`` stay single-device.
+        Returns ``dispatch(prepared) -> [Q, N] np.int32`` or ``None``.
+        """
+        if self.mesh is None:
+            return None
+        user_sh, _scene_sh, out_sh = serve_shardings(self.mesh)
+        mesh_xs, mesh_ys, n = self._mesh_xs, self._mesh_ys, self._mesh_n
+
+        if backend.name == "dense-ref":
+            key = ("dense-ref",)
+            step = self._mesh_steps.get(key)
+            if step is None:
+                from repro.kernels.ref import raycast_count_batch_ref
+
+                step = jax.jit(
+                    raycast_count_batch_ref,
+                    in_shardings=(user_sh, user_sh, self._mesh_q_sharding(4)),
+                    out_shardings=out_sh,
+                )
+                self._mesh_steps[key] = step
+            return lambda prepared: np.asarray(
+                step(mesh_xs, mesh_ys, jnp.asarray(prepared))
+            )[:, :n]
+
+        if backend.name == "grid":
+            from repro.core.grid import grid_hit_counts_batch_jnp
+
+            # the grid math closes over the domain rect; only the engine's
+            # shared rect gets a cached sharded step.  A transient rect
+            # (out-of-hull point query) would mean one XLA compile per
+            # batch and an ever-growing step cache — fall back to the
+            # single-device dispatch for those instead.
+            if rect != self.rect:
+                return None
+            key = ("grid", self.config.grid_g)
+            step = self._mesh_steps.get(key)
+            if step is None:
+                G = self.config.grid_g
+
+                def _grid_fn(xs, ys, base, lists, coeffs, rect=rect, G=G):
+                    return grid_hit_counts_batch_jnp(
+                        xs, ys, base, lists, coeffs, rect, G
+                    )
+
+                step = jax.jit(
+                    _grid_fn,
+                    in_shardings=(
+                        user_sh,
+                        user_sh,
+                        self._mesh_q_sharding(2),
+                        self._mesh_q_sharding(3),
+                        self._mesh_q_sharding(4),
+                    ),
+                    out_shardings=out_sh,
+                )
+                self._mesh_steps[key] = step
+            return lambda prepared: np.asarray(
+                step(mesh_xs, mesh_ys, *(jnp.asarray(p) for p in prepared))
+            )[:, :n]
+
+        if backend.name == "bvh":
+            from repro.core.bvh import bvh_hit_counts_batch
+
+            key = ("bvh", k)
+            step = self._mesh_steps.get(key)
+            if step is None:
+                if sum(1 for kk in self._mesh_steps if kk[0] == "bvh") >= 16:
+                    return None  # pathological many-k workload: stop compiling
+
+                def _bvh_fn(xs, ys, left, right, bbox, coeffs, k=k):
+                    return bvh_hit_counts_batch(
+                        xs, ys, left, right, bbox, coeffs, k=k
+                    )
+
+                step = jax.jit(
+                    _bvh_fn,
+                    in_shardings=(
+                        user_sh,
+                        user_sh,
+                        self._mesh_q_sharding(2),
+                        self._mesh_q_sharding(2),
+                        self._mesh_q_sharding(3),
+                        self._mesh_q_sharding(4),
+                    ),
+                    out_shardings=out_sh,
+                )
+                self._mesh_steps[key] = step
+            return lambda prepared: np.asarray(
+                step(mesh_xs, mesh_ys, *(jnp.asarray(p) for p in prepared))
+            )[:, :n]
+
         return None
 
     # ------------------------------------------------------------------
@@ -303,6 +409,36 @@ class RkNNEngine:
             store[key] = backend.build_index(scene, grid_g=self.config.grid_g)
         return store[key]
 
+    def _batch_cache_get(self, key):
+        """LRU lookup (None key → miss); counts a hit in the stats."""
+        if key is None:
+            return None
+        with self._batch_lock:
+            hit = self._batch_cache.get(key)
+            if hit is not None:
+                self._batch_cache.move_to_end(key)
+                self.stats.batch_cache_hits += 1
+            return hit
+
+    def _batch_cache_put(self, key, value) -> None:
+        if key is None:
+            return
+        with self._batch_lock:
+            self._batch_cache[key] = value
+            if len(self._batch_cache) > self.config.batch_cache:
+                self._batch_cache.popitem(last=False)
+
+    def _build_scenes(self, queries: list, k: int, rect: Rect, workers: int):
+        """Cache-aware host scene builds, optionally thread-pooled."""
+
+        def one(q):
+            return self._build_scene(q, k, rect)
+
+        if workers > 0 and len(queries) > 1:
+            with concurrent.futures.ThreadPoolExecutor(workers) as pool:
+                return list(pool.map(one, queries))
+        return [one(q) for q in queries]
+
     def _mp_bucket(self, scenes: list[Scene]) -> int:
         if self.config.pad_to is not None:
             return self.config.pad_to
@@ -332,23 +468,13 @@ class RkNNEngine:
                 tuple(_q_key(q) for q in queries),
                 rect,
             )
-            with self._batch_lock:
-                hit = self._batch_cache.get(cache_key)
-                if hit is not None:
-                    self._batch_cache.move_to_end(cache_key)
-                    self.stats.batch_cache_hits += 1
-                    req, prepared, scenes = hit
-                    return req, prepared, scenes
+            hit = self._batch_cache_get(cache_key)
+            if hit is not None:
+                req, prepared, scenes = hit
+                return req, prepared, scenes
 
-        def one(q):
-            return self._build_scene(q, k, rect)
-
-        if scene_workers > 0 and len(queries) > 1:
-            with concurrent.futures.ThreadPoolExecutor(scene_workers) as pool:
-                scenes = list(pool.map(one, queries))
-        else:
-            scenes = [one(q) for q in queries]
-        dispatch = self._dense_dispatch_for(backend)
+        scenes = self._build_scenes(queries, k, rect, scene_workers)
+        dispatch = self._mesh_dispatch_for(backend, rect=rect, k=k)
         # the mesh dispatch closes over its own sharded user arrays — don't
         # materialize a second, replicated device copy it would never read
         req = BatchRequest(
@@ -366,21 +492,85 @@ class RkNNEngine:
             q_pts=q_pts,
             excludes=excludes,
             mp=self._mp_bucket(scenes),
-            dense_dispatch=dispatch,
+            dispatch=dispatch,
         )
         prepared = backend.prepare_batch(req)
-        if cache_key is not None:
-            with self._batch_lock:
-                self._batch_cache[cache_key] = (req, prepared, scenes)
-                if len(self._batch_cache) > self.config.batch_cache:
-                    self._batch_cache.popitem(last=False)
+        self._batch_cache_put(cache_key, (req, prepared, scenes))
         return req, prepared, scenes
+
+    # ------------------------------------------------------------------
+    # planner (the "auto" meta-backend)
+    # ------------------------------------------------------------------
+    def _scene_cached(self, q, k: int, rect: Rect) -> bool:
+        if self.scene_cache is None:
+            return False
+        return self.scene_cache.contains(
+            self.facilities, q, k, rect, fp=self._fingerprint()
+        )
+
+    def _record_plan(self, planner, plan: dict, observed_s: float) -> None:
+        """Close out one plan: observed cost, engine log, stats, planner."""
+        plan["observed_s"] = observed_s
+        self._plan_log.append(plan)
+        for name, n in plan.get("decisions", {}).items():
+            self.stats.planner_decisions[name] = (
+                self.stats.planner_decisions.get(name, 0) + n
+            )
+        self.stats.planner_pred_s += plan.get("predicted_s", 0.0)
+        self.stats.planner_obs_s += observed_s
+        planner.record(plan)
+
+    def explain(self) -> list[dict]:
+        """Recent ``auto`` plans, oldest first: each entry carries the
+        chosen backend(s), predicted cost, candidate costs, and — once the
+        dispatch ran — observed cost."""
+        return list(self._plan_log)
+
+    def _plan_amortized(self) -> bool:
+        """Whether the planner prices geometric backends at steady-state
+        (verify-only) cost.  True on engines with a scene cache: they are
+        long-lived serving objects, so a scene build is an *investment*
+        the cache repays on every repeat — the planner should pick the
+        backend that is cheapest once hot, not the one that is cheapest
+        for exactly one cold call.  One-shot shims disable the cache and
+        get the strict per-call comparison.
+        """
+        return self.scene_cache is not None
+
+    def _plan_single(self, planner, q_build, k: int, q_pt: np.ndarray):
+        """Pre-scene routing of one query.  Returns (backend, plan)."""
+        rect = self._rect_for(q_pt[None])
+        amortized = self._plan_amortized()
+        shape = WorkloadShape(
+            len(self.facilities),
+            len(self.users),
+            k,
+            1,
+            cache_hit=amortized or self._scene_cached(q_build, k, rect),
+        )
+        choice, pred, costs = planner.select(shape)
+        plan = {
+            "mode": "single",
+            "backend": choice,
+            "predicted_s": pred,
+            "candidates": costs,
+            "cache_hit": shape.cache_hit,
+            "amortized": amortized,
+            "decisions": {choice: 1},
+        }
+        return get_backend(choice), plan
 
     # ------------------------------------------------------------------
     # public query surface
     # ------------------------------------------------------------------
     def query(self, q, k: int, *, backend: str | None = None) -> RkNNResult:
-        """Bichromatic RkNN of one query (facility index or ``[2]`` point)."""
+        """Bichromatic RkNN of one query (facility index or ``[2]`` point).
+
+        With the ``auto`` backend the planner picks the concrete backend
+        *before* any scene is built (a brute decision skips the filter
+        phase entirely); the result's ``backend`` field reports the
+        concrete choice and :meth:`explain` the full plan.
+        """
         b = get_backend(backend or self.config.backend)
         arr = np.asarray(q)
         if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
@@ -389,6 +579,11 @@ class RkNNEngine:
         else:
             q_pt = np.asarray(q, np.float64).reshape(2)
             q_build, exclude = q_pt, None
+
+        plan = planner = None
+        if b.is_meta:
+            planner = b
+            b, plan = self._plan_single(planner, q_build, k, q_pt)
 
         if not b.uses_scene:
             # geometry-free: never materialize the device user arrays
@@ -407,6 +602,8 @@ class RkNNEngine:
             t1 = time.perf_counter()
             self.stats.n_queries += 1
             self.stats.t_verify_s += t1 - t0
+            if plan is not None:
+                self._record_plan(planner, plan, t1 - t0)
             return RkNNResult(counts < k, counts, None, 0.0, t1 - t0, b.name)
 
         t0 = time.perf_counter()
@@ -429,6 +626,8 @@ class RkNNEngine:
         self.stats.t_filter_s += t1 - t0
         self.stats.t_verify_s += t2 - t1
         self.stats.m_max = max(self.stats.m_max, scene.n_tris)
+        if plan is not None:
+            self._record_plan(planner, plan, t2 - t0)
         return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, b.name)
 
     def query_batch(
@@ -462,6 +661,8 @@ class RkNNEngine:
                 backend=b.name,
                 k=k,
             )
+        if b.is_meta:
+            return self._query_batch_planner(b, qs, k, workers)
         queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
 
         if not b.uses_scene:
@@ -498,6 +699,201 @@ class RkNNEngine:
         self.stats.t_verify_s += t2 - t1
         self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
         return RkNNBatchResult(counts < k, counts, scenes, t1 - t0, t2 - t1, b.name, k)
+
+    def _dispatch_group(
+        self,
+        b: Backend,
+        idxs: list[int],
+        scenes: list[Scene] | None,
+        q_pts: np.ndarray,
+        excludes: list,
+        k: int,
+        rect: Rect | None,
+    ) -> tuple[np.ndarray, float, float]:
+        """Prepare + count one planner group.  Returns ``(counts [|idxs|, N],
+        t_prepare_s, t_count_s)`` — prepare is host (filter), count device
+        (verify).  Prepared geometric groups are LRU-cached alongside the
+        fixed-backend batches, so a repeated ``auto`` workload skips the
+        re-stacking just like a repeated fixed-backend one.
+        """
+        t0 = time.perf_counter()
+        if not b.uses_scene:
+            req = BatchRequest(
+                xs=None,
+                ys=None,
+                k=k,
+                users=self.users,
+                facilities=self.facilities,
+                q_pts=q_pts[idxs],
+                excludes=[excludes[i] for i in idxs],
+            )
+            prepared = None
+        else:
+            cache_key = None
+            if self.config.batch_cache > 0:
+                # excludes participate in the key: a facility-index query
+                # (exclude=i) and a point query at that facility's exact
+                # coordinates (exclude=None) build different scenes
+                cache_key = (
+                    "auto",
+                    b.name,
+                    k,
+                    tuple((_q_key(q_pts[i]), excludes[i]) for i in idxs),
+                    rect,
+                )
+                hit = self._batch_cache_get(cache_key)
+                if hit is not None:
+                    req, prepared, _sub = hit
+                    t1 = time.perf_counter()
+                    counts = b.count_batch(req, prepared)
+                    t2 = time.perf_counter()
+                    return np.asarray(counts), t1 - t0, t2 - t1
+            sub = [scenes[i] for i in idxs]
+            dispatch = self._mesh_dispatch_for(b, rect=rect, k=k)
+            req = BatchRequest(
+                xs=None if dispatch is not None else self.xs,
+                ys=None if dispatch is not None else self.ys,
+                k=k,
+                rect=rect,
+                grid_g=self.config.grid_g,
+                scenes=sub,
+                indexes=[self._index_for(b, s) for s in sub],
+                users=self.users,
+                facilities=self.facilities,
+                q_pts=q_pts[idxs],
+                excludes=[excludes[i] for i in idxs],
+                mp=self._mp_bucket(sub),
+                dispatch=dispatch,
+            )
+            prepared = b.prepare_batch(req)
+            self._batch_cache_put(cache_key, (req, prepared, sub))
+        t1 = time.perf_counter()
+        counts = b.count_batch(req, prepared)
+        t2 = time.perf_counter()
+        return np.asarray(counts), t1 - t0, t2 - t1
+
+    def _query_batch_planner(
+        self, planner, qs: list, k: int, workers: int
+    ) -> RkNNBatchResult:
+        """The ``auto`` batched path: price, (maybe) filter, split, recombine.
+
+        Two-stage decision:
+
+        1. *Pre-scene*: the whole batch is priced with the estimated scene
+           size.  If brute wins outright, no scene is ever built.
+        2. *Post-scene*: scenes are built (cache-aware), each query is
+           re-priced with its **actual** triangle count (filter cost now
+           sunk → ``cache_hit=True``), and the batch is partitioned into
+           per-backend groups dispatched independently; counts recombine
+           in query order.  Count *semantics* may differ per row (bvh
+           saturates at ``k``, brute counts distance ranks) — masks are
+           the invariant, as everywhere else.
+
+        The whole decision (assignments + scenes) is memoized in the batch
+        LRU: a repeated workload goes straight to its group dispatches
+        (which hit their own prepared-group LRU) without re-planning.
+        """
+        queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
+        n_f, n_u, q_n = len(self.facilities), len(self.users), len(qs)
+        t0 = time.perf_counter()
+        rect = self._rect_for(q_pts)
+
+        plan_key = cached_decision = None
+        if self.config.batch_cache > 0:
+            from repro.planner.profiles import profile_epoch
+
+            # the epoch invalidates memoized decisions when the operator
+            # activates a new (re)calibrated profile
+            plan_key = (
+                "auto-plan",
+                profile_epoch(),
+                k,
+                tuple(_q_key(q) for q in queries),
+                rect,
+            )
+            cached_decision = self._batch_cache_get(plan_key)
+
+        if cached_decision is not None:
+            per_q, groups, scenes = cached_decision
+            plan: dict = {
+                "mode": "batch",
+                "predicted_s": sum(cost for _, cost in per_q),
+                "plan_cache_hit": True,
+                "k": k,
+                "q": q_n,
+            }
+        else:
+            # price geometric backends at verify-only cost when the filter
+            # phase is already amortized (scenes cached) — or *will* be (see
+            # _plan_amortized: a cache-carrying engine invests in scene
+            # builds because every repeat of a hot query rides them for free)
+            amortized = self._plan_amortized() or all(
+                self._scene_cached(q, k, rect) for q in queries
+            )
+            batch_shape = WorkloadShape(n_f, n_u, k, q_n, cache_hit=amortized)
+            ranked = planner.rank(batch_shape)
+            plan = {
+                "mode": "batch",
+                "predicted_s": ranked[0][1],
+                "candidates": dict(ranked),
+                "amortized": amortized,
+                "k": k,
+                "q": q_n,
+            }
+            if not get_backend(ranked[0][0]).uses_scene:
+                # brute wins on the estimate: never build a scene
+                name = ranked[0][0]
+                per_q = [(name, ranked[0][1] / max(q_n, 1))] * q_n
+                groups = {name: list(range(q_n))}
+                scenes = None
+            else:
+                scenes = self._build_scenes(queries, k, rect, workers)
+                # re-price per query with the actual scene size; the filter
+                # cost is sunk now
+                per_q = planner.assign_batch(
+                    [
+                        WorkloadShape(n_f, n_u, k, 1, m_tris=s.n_tris, cache_hit=True)
+                        for s in scenes
+                    ]
+                )
+                groups = {}
+                for i, (name, _cost) in enumerate(per_q):
+                    groups.setdefault(name, []).append(i)
+            self._batch_cache_put(plan_key, (per_q, groups, scenes))
+
+        counts = np.zeros((q_n, n_u), np.int32)
+        t_count_total = 0.0
+        observed_group: dict[str, float] = {}
+        for name, idxs in groups.items():
+            gcounts, t_prep, t_count = self._dispatch_group(
+                get_backend(name), idxs, scenes, q_pts, excludes, k, rect
+            )
+            counts[idxs] = gcounts
+            t_count_total += t_count
+            observed_group[name] = t_prep + t_count
+        t_end = time.perf_counter()
+        t_filter = (t_end - t0) - t_count_total
+
+        plan.update(
+            assignments=[name for name, _ in per_q],
+            predicted_per_query=[cost for _, cost in per_q],
+            split=len(groups) > 1,
+            groups={name: len(idxs) for name, idxs in groups.items()},
+            observed_group_s=observed_group,
+            decisions={name: len(idxs) for name, idxs in groups.items()},
+        )
+        self.stats.n_queries += q_n
+        self.stats.n_batches += 1
+        self.stats.t_filter_s += t_filter
+        self.stats.t_verify_s += t_count_total
+        if scenes:
+            self.stats.m_max = max(
+                self.stats.m_max, max(s.n_tris for s in scenes)
+            )
+        self._record_plan(planner, plan, t_end - t0)
+        return RkNNBatchResult(
+            counts < k, counts, scenes, t_filter, t_count_total, "auto", k
+        )
 
     def query_mono(self, q_idx: int, k: int, *, backend: str | None = None) -> RkNNResult:
         """Monochromatic RkNN over the facility set (paper §2.1 / §4.5).
@@ -547,6 +943,10 @@ class RkNNEngine:
 
         Producer exceptions are re-raised in the consumer — the generator
         never hangs on a failed build.
+
+        With the ``auto`` backend the planner re-routes each batch as a
+        whole (pre-scene, estimated cost — no per-query splitting on the
+        streaming path, which would defeat the double buffering).
         """
         b = get_backend(backend or self.config.backend)
         buf: "queue.Queue" = queue.Queue(maxsize=2)
@@ -557,10 +957,28 @@ class RkNNEngine:
                     qs = list(batch)
                     t0 = time.perf_counter()
                     queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
-                    if b.uses_scene:
+                    b_eff, plan = b, None
+                    if b.is_meta:
+                        shape = WorkloadShape(
+                            len(self.facilities),
+                            len(self.users),
+                            k,
+                            len(qs),
+                            cache_hit=self._plan_amortized(),
+                        )
+                        choice, pred, costs = b.select(shape)
+                        plan = {
+                            "mode": "stream-batch",
+                            "backend": choice,
+                            "predicted_s": pred,
+                            "candidates": costs,
+                            "decisions": {choice: len(qs)},
+                        }
+                        b_eff = get_backend(choice)
+                    if b_eff.uses_scene:
                         rect = self._rect_for(q_pts)
                         built = self._filter_batch(
-                            b, queries, q_pts, excludes, k, rect,
+                            b_eff, queries, q_pts, excludes, k, rect,
                             self.config.scene_workers,
                         )
                     else:
@@ -574,8 +992,9 @@ class RkNNEngine:
                             excludes=excludes,
                         )
                         built = (req, None, None)
-                    self.stats.t_filter_s += time.perf_counter() - t0
-                    buf.put((batch, len(qs), built))
+                    t_filter = time.perf_counter() - t0
+                    self.stats.t_filter_s += t_filter
+                    buf.put((batch, len(qs), b_eff, plan, t_filter, built))
                 buf.put(None)
             except BaseException as e:  # surface in the consumer, no deadlock
                 buf.put(e)
@@ -588,14 +1007,21 @@ class RkNNEngine:
                 return
             if isinstance(item, BaseException):
                 raise item
-            batch, q_n, (req, prepared, scenes) = item
+            batch, q_n, b_eff, plan, t_filter, (req, prepared, scenes) = item
             t0 = time.perf_counter()
-            counts = b.count_batch(req, prepared)
-            self.stats.t_verify_s += time.perf_counter() - t0
+            counts = b_eff.count_batch(req, prepared)
+            t1 = time.perf_counter()
+            self.stats.t_verify_s += t1 - t0
             self.stats.n_queries += q_n
             self.stats.n_batches += 1
             if scenes:
                 self.stats.m_max = max(
                     self.stats.m_max, max(s.n_tris for s in scenes)
                 )
+            if plan is not None:
+                # observed = this batch's own filter + verify work — NOT the
+                # wall-clock since the producer started, which would include
+                # time spent waiting in the double buffer and corrupt the
+                # planner's pred-vs-obs calibration signal
+                self._record_plan(b, plan, t_filter + (t1 - t0))
             yield batch, counts < k

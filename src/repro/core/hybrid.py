@@ -10,18 +10,20 @@
   which wires it into the single, batched, and streaming paths.
 
 * **Hybrid dispatcher** (direction 3 — "dynamically select between
-  RT-RkNN and traditional pruning based on data characteristics"): a
-  cost-model dispatch between the RT path and SLICE, fitted to the
-  measured crossovers in `bench_output.txt`:
+  RT-RkNN and traditional pruning based on data characteristics"): now a
+  *shim over the query planner* (:mod:`repro.planner`).  The full
+  realization of this direction is the ``auto`` backend — calibrated
+  per-backend cost models, per-query dispatch, batch splitting — and
+  :func:`choose_engine` prices its RT-vs-SLICE frontier from the same
+  active profile.  Only when no profile is installed does it fall back
+  (warning once) to the constants fitted offline to ``bench_output.txt``:
 
       cost_rt    ≈ c_scene(|F|, k)      +  c_cast · m(|F|, k) · |U|
       cost_slice ≈ c_filter(|F|)        +  c_verify · k · candidates(|U|, k)
 
   The paper's empirical law (Figs 7–13): SLICE wins at dense facilities /
-  small k / small |U|; RT wins at sparse |F|, large k, large |U|.  The
-  dispatcher encodes exactly that frontier with measured constants and is
-  validated to pick the faster engine on both extremes in
-  ``tests/test_hybrid.py``.
+  small k / small |U|; RT wins at sparse |F|, large k, large |U| —
+  validated on both extremes in ``tests/test_hybrid.py``.
 """
 
 from __future__ import annotations
@@ -71,6 +73,14 @@ class SceneCache:
         f = np.ascontiguousarray(facilities, dtype=np.float64)
         return hash((f.shape, f.tobytes()[:4096], float(f.sum())))
 
+    def contains(self, facilities, q, k, rect=None, *, fp: int | None = None) -> bool:
+        """Peek (no LRU reordering, no stats) — the planner prices a cache
+        hit as "filter phase free" before deciding where to dispatch."""
+        if fp is None:
+            fp = self.fingerprint(facilities)
+        with self._lock:
+            return (fp, _q_key(q), k, rect) in self._store
+
     def get_or_build(
         self, facilities, q, k, rect=None, *, fp: int | None = None, **kw
     ) -> tuple[Scene, bool]:
@@ -91,23 +101,83 @@ class SceneCache:
         return scene, False
 
 
-def choose_engine(n_facilities: int, n_users: int, k: int) -> str:
-    """'rt' or 'slice' from the measured cost frontier (milliseconds).
+_warned_no_profile = False
 
-    Fitted to OUR CPU measurements in ``bench_output.txt`` (not the
-    paper's GPU constants — the frontier's *shape* matches the paper, the
-    crossover points are runtime-specific and would be re-fitted on TPU):
+
+def choose_engine(n_facilities: int, n_users: int, k: int) -> str:
+    """'rt' or 'slice' from the RT-vs-filter–refine cost frontier.
+
+    With an *active* planner profile (:func:`repro.planner.profiles.
+    set_active_profile`, typically installed after running
+    :mod:`repro.planner.calibrate` on this hardware), the frontier is a
+    live lookup: the cheapest registered RT-path backend vs. the
+    profile's ``"slice"`` pseudo-backend model.
+
+    With no profile, falls back — warning once — to the constants fitted
+    offline to ``bench_output.txt`` (our CPU crossovers, not the paper's
+    GPU ones):
 
         rt_ms    ≈ 30 + 1.5·k + 0.35·|U|/1e3            (scene + cast)
         slice_ms ≈ 0.002·|F| + 0.4·k^1.5·(|U|/|F|)/1e3  (filter + verify)
 
-    Validation points: fig9 k=25 → slice 60 (meas 128) / rt 487 (meas
-    910); k=200 → slice 1357 (meas 2230) / rt 900 (meas 2553) — right
-    ordering at both ends and a crossover near the measured one (k≈250
-    at default density; k≈20 at sparse |F|=100, |U|=1e6).
+    Validation points for the fallback: fig9 k=25 → slice 60 (meas 128) /
+    rt 487 (meas 910); k=200 → slice 1357 (meas 2230) / rt 900 (meas
+    2553) — right ordering at both ends, crossover near the measured one.
     """
     if n_facilities <= 0:
         return "rt"
+
+    from repro.planner.profiles import get_active_profile
+
+    prof = get_active_profile()
+    reason = None
+    if prof is None:
+        reason = "no active planner profile"
+    elif "slice" not in prof.models:
+        reason = (
+            "the active profile has no 'slice' model (calibrated with "
+            "--no-slice?)"
+        )
+    else:
+        from repro.planner.models import WorkloadShape
+
+        shape = WorkloadShape(n_facilities, n_users, k, 1)
+        # price the 'rt' side with what the rt branch actually executes:
+        # dense-ref when the profile knows it, else the cheapest scene-
+        # using backend.  brute (no ray casting) and interpret-mode dense
+        # (a correctness tool) are not the rt path and must not stand in
+        # for its cost.
+        if "dense-ref" in prof.models:
+            rt_candidates: tuple[str, ...] = ("dense-ref",)
+        else:
+            from repro.core.backends import available_backends, get_backend
+
+            rt_candidates = tuple(
+                n
+                for n in prof.models
+                if n not in ("slice", "dense")
+                and n in available_backends()
+                and get_backend(n).uses_scene
+            )
+        if rt_candidates:
+            _, rt_s = prof.best_backend(shape, rt_candidates)
+            slice_s = prof.predict_s("slice", shape)
+            return "rt" if rt_s < slice_s else "slice"
+        reason = "the active profile has no usable RT-path backend model"
+
+    global _warned_no_profile
+    if not _warned_no_profile:
+        _warned_no_profile = True
+        import warnings
+
+        warnings.warn(
+            f"choose_engine: {reason} — falling back to hard-coded cost "
+            "constants fitted offline (likely stale for this hardware). "
+            "Run repro.planner.calibrate and set_active_profile() to use "
+            "measured costs.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
     rt_ms = 30.0 + 1.5 * k + 0.35 * n_users / 1e3
     slice_ms = 0.002 * n_facilities + 0.4 * (k**1.5) * (n_users / max(n_facilities, 1)) / 1e3
     return "rt" if rt_ms < slice_ms else "slice"

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.backends import available_backends
+from repro.core.backends import concrete_backends
 from repro.core.engine import RkNNConfig, RkNNEngine
 from repro.core.geometry import Rect
 from repro.core.results import RkNNBatchResult, RkNNResult
@@ -38,10 +38,11 @@ __all__ = [
     "BACKENDS",
 ]
 
-#: Registered backend names, in registration order (kept as a module
-#: attribute for backward compatibility; the registry is the source of
-#: truth and late registrations won't be reflected here).
-BACKENDS = available_backends()
+#: Registered *concrete* backend names, in registration order (kept as a
+#: module attribute for backward compatibility; the registry is the source
+#: of truth and late registrations won't be reflected here).  Meta
+#: backends — the ``auto`` planner — route to these and are excluded.
+BACKENDS = concrete_backends()
 
 
 def _one_shot_engine(

@@ -1,0 +1,42 @@
+"""Adaptive query planner: calibrated per-backend cost models + dispatch.
+
+The paper's core claim is regime-dependent — ray casting wins at sparse
+facilities / dense users / large ``k``, filter–refine methods elsewhere —
+so a production engine must pick the right execution path *per query*.
+This package turns that frontier into data:
+
+* :mod:`repro.planner.models` — parametric (power-law) cost models over
+  the workload shape (|F|, |U|, k, Q, scene size, cache hit/miss);
+* :mod:`repro.planner.calibrate` — an on-hardware harness that
+  micro-benchmarks every registered backend on synthetic shape grids and
+  fits the models;
+* :mod:`repro.planner.profiles` — a versioned JSON store for fitted
+  profiles, plus the process-wide *active* profile and a built-in prior
+  fallback;
+* :mod:`repro.planner.backend` — :class:`PlannerBackend`, registered as
+  ``"auto"`` in the backend registry: cost-dispatches each request to the
+  predicted-cheapest concrete backend, splitting heterogeneous batches.
+"""
+
+from repro.planner.models import BackendCostModel, CostModel, WorkloadShape, est_scene_tris
+from repro.planner.profiles import (
+    PROFILE_VERSION,
+    PlannerProfile,
+    builtin_profile,
+    get_active_profile,
+    load_profile,
+    set_active_profile,
+)
+
+__all__ = [
+    "WorkloadShape",
+    "CostModel",
+    "BackendCostModel",
+    "est_scene_tris",
+    "PlannerProfile",
+    "PROFILE_VERSION",
+    "builtin_profile",
+    "get_active_profile",
+    "set_active_profile",
+    "load_profile",
+]

@@ -1,0 +1,208 @@
+"""``auto``: the planner as a registered backend.
+
+:class:`PlannerBackend` never counts anything itself — it prices every
+registered concrete backend with the active (or built-in prior) profile
+and delegates to the predicted-cheapest one.  The
+:class:`~repro.core.engine.RkNNEngine` integrates it at the *planning*
+level (``is_meta = True``): single queries are re-routed before any scene
+is built (so a brute decision skips the filter phase entirely), and
+batches are optionally **split** — once scenes exist, each query is
+re-priced with its actual scene size and the batch is partitioned into
+per-backend groups whose counts are recombined in order.
+
+Used directly through the raw ``Backend`` protocol (no engine), it still
+works: ``count``/``count_batch`` select among the backends the request
+can actually feed and delegate, without splitting.
+
+``explain()`` returns the most recent plan; the engine keeps a rolling
+log of plans (``RkNNEngine.explain()``) and accumulates predicted vs.
+observed cost in ``EngineStats``.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.planner.models import WorkloadShape
+from repro.planner.profiles import PlannerProfile, active_or_builtin
+
+__all__ = ["PlannerBackend"]
+
+
+class PlannerBackend:
+    """Cost-dispatching meta-backend (registered as ``"auto"``).
+
+    Duck-types the :class:`repro.core.backends.Backend` protocol instead
+    of subclassing it: ``core.backends`` imports this module to register
+    it, so this module must not import ``core.backends`` at import time
+    (all core imports live inside methods, keeping the edge acyclic in
+    either import order).
+    """
+
+    name = "auto"
+    is_meta = True
+    uses_scene = True  # may route to geometric backends
+
+    #: A heterogeneous batch is split across backends only when the
+    #: predicted per-query total undercuts the best single-backend total
+    #: by at least this factor — splitting costs an extra dispatch per
+    #: group and per-query predictions near the frontier are the model's
+    #: least certain, so close calls consolidate to one backend.
+    split_margin = 0.8
+
+    def __init__(self) -> None:
+        self._last_plan: dict | None = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # pricing
+    # ------------------------------------------------------------------
+    def profile(self) -> PlannerProfile:
+        return active_or_builtin()
+
+    def candidates(self, profile: PlannerProfile | None = None) -> tuple[str, ...]:
+        """Concrete registered backends the profile can price."""
+        from repro.core.backends import concrete_backends
+
+        prof = profile or self.profile()
+        return tuple(n for n in concrete_backends() if n in prof.models)
+
+    def rank(
+        self, shape: WorkloadShape, candidates: tuple[str, ...] | None = None
+    ) -> list[tuple[str, float]]:
+        """Candidates sorted cheapest-first for ``shape``."""
+        prof = self.profile()
+        return prof.rank(shape, candidates or self.candidates(prof))
+
+    def select(
+        self, shape: WorkloadShape, candidates: tuple[str, ...] | None = None
+    ) -> tuple[str, float, dict[str, float]]:
+        """(chosen backend, predicted seconds, all candidate costs)."""
+        ranked = self.rank(shape, candidates)
+        return ranked[0][0], ranked[0][1], dict(ranked)
+
+    def assign_batch(
+        self,
+        shapes: list[WorkloadShape],
+        candidates: tuple[str, ...] | None = None,
+    ) -> list[tuple[str, float]]:
+        """Per-query (backend, predicted seconds) for an already-filtered
+        batch — shapes carry actual scene sizes and ``cache_hit=True`` so
+        only verify-side cost differentiates the candidates.
+
+        Splitting is *conservative*: the free-choice per-query assignment
+        is kept only when its predicted total beats the best single
+        backend's total by more than ``split_margin``; otherwise the whole
+        batch consolidates onto that single backend (all costs compared at
+        the same per-query granularity, so the margin is apples-to-apples).
+        """
+        import numpy as np
+
+        from repro.planner.models import featurize
+
+        prof = self.profile()
+        cands = candidates or self.candidates(prof)
+        feats = np.stack([featurize(s) for s in shapes])  # [Q, n_features]
+        hits = np.array([s.cache_hit for s in shapes], bool)
+        costs = np.stack(
+            [prof.models[c].predict_total_many_s(feats, hits) for c in cands]
+        )  # [C, Q]
+        totals = costs.sum(axis=1)
+        best_single = int(np.argmin(totals))
+        winner = np.argmin(costs, axis=0)  # [Q]
+        split_total = float(costs[winner, np.arange(len(shapes))].sum())
+        if split_total < self.split_margin * float(totals[best_single]):
+            return [
+                (cands[int(w)], float(costs[int(w), i]))
+                for i, w in enumerate(winner)
+            ]
+        return [
+            (cands[best_single], float(costs[best_single, i]))
+            for i in range(len(shapes))
+        ]
+
+    # ------------------------------------------------------------------
+    # explain
+    # ------------------------------------------------------------------
+    def record(self, plan: dict) -> None:
+        with self._lock:
+            self._last_plan = plan
+
+    def explain(self) -> dict | None:
+        """The most recent plan routed through this planner instance."""
+        with self._lock:
+            return self._last_plan
+
+    # ------------------------------------------------------------------
+    # raw Backend protocol (direct use, no engine): delegate, no split
+    # ------------------------------------------------------------------
+    def build_index(self, scene, *, grid_g: int = 64):
+        return None
+
+    def prepare_batch(self, req):
+        return None
+
+    def _direct_candidates(self, *, has_scene: bool, has_points: bool):
+        from repro.core.backends import get_backend
+
+        names = []
+        for n in self.candidates():
+            b = get_backend(n)
+            if b.uses_scene and has_scene:
+                names.append(n)
+            elif not b.uses_scene and has_points:
+                names.append(n)
+        if not names:
+            raise ValueError(
+                "auto backend: request carries neither a scene nor raw "
+                "facility/user points any priced backend can consume"
+            )
+        return tuple(names)
+
+    def count(self, req):
+        from repro.core.backends import get_backend
+
+        n_u = int(req.xs.shape[0]) if req.xs is not None else len(req.users)
+        n_f = len(req.facilities) if req.facilities is not None else req.k
+        shape = WorkloadShape(
+            n_f, n_u, req.k, 1,
+            m_tris=None if req.scene is None else req.scene.n_tris,
+            cache_hit=req.scene is not None,  # scene already built: verify only
+        )
+        cands = self._direct_candidates(
+            has_scene=req.scene is not None,
+            has_points=req.users is not None and req.q_pt is not None,
+        )
+        choice, pred, costs = self.select(shape, cands)
+        self.record(
+            {"mode": "direct-single", "backend": choice, "predicted_s": pred,
+             "candidates": costs}
+        )
+        b = get_backend(choice)
+        if b.uses_scene and req.index is None:
+            req.index = b.build_index(req.scene, grid_g=req.grid_g)
+        return b.count(req)
+
+    def count_batch(self, req, prepared):
+        from repro.core.backends import get_backend
+
+        n_u = int(req.xs.shape[0]) if req.xs is not None else len(req.users)
+        n_f = len(req.facilities) if req.facilities is not None else req.k
+        q = len(req.q_pts) if req.q_pts is not None else len(req.scenes or ())
+        has_scenes = bool(req.scenes)
+        shape = WorkloadShape(
+            n_f, n_u, req.k, max(q, 1),
+            m_tris=max(s.n_tris for s in req.scenes) if has_scenes else None,
+            cache_hit=has_scenes,
+        )
+        cands = self._direct_candidates(
+            has_scene=has_scenes,
+            has_points=req.users is not None and req.q_pts is not None,
+        )
+        choice, pred, costs = self.select(shape, cands)
+        self.record(
+            {"mode": "direct-batch", "backend": choice, "predicted_s": pred,
+             "candidates": costs}
+        )
+        b = get_backend(choice)
+        return b.count_batch(req, b.prepare_batch(req))

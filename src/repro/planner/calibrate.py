@@ -1,0 +1,200 @@
+"""On-hardware calibration: micro-benchmark every backend, fit cost models.
+
+For each shape in the synthetic calibration grid
+(:func:`repro.workloads.calibration_grid`) and each registered concrete
+backend, a throwaway one-shot engine runs the batched query and reports
+the paper's two-phase split — host filter time and device verify time —
+which become the fit targets for that backend's
+:class:`~repro.planner.models.BackendCostModel`.  SLICE (not a registered
+``Backend`` — it is the filter–refine baseline the hybrid frontier
+compares against) is measured alongside so
+:func:`repro.core.hybrid.choose_engine` can price it from the same
+profile.
+
+Each (shape, backend) cell is warmed once before timing so XLA
+compilation does not land in the fit, and the best of ``repeats`` runs is
+kept (micro-benchmark convention; scheduler noise only ever adds time).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.planner.calibrate \
+        --out planner_profile.json [--full] [--repeats 2] [--activate]
+
+With no ``--out`` the profile is written to the default store
+(:func:`repro.planner.profiles.default_profile_path`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.planner.models import BackendCostModel, WorkloadShape
+from repro.planner.profiles import (
+    PROFILE_VERSION,
+    PlannerProfile,
+    default_profile_path,
+    hardware_fingerprint,
+    set_active_profile,
+)
+from repro.workloads import Scenario, Workload, calibration_grid
+
+__all__ = ["calibrate", "measure_backend", "measure_slice", "main"]
+
+
+def _mean_scene_tris(w: Workload) -> float:
+    """Mean occluder-scene triangle count over the workload's queries."""
+    from repro.core.geometry import Rect
+    from repro.core.scene import build_scene
+
+    rect = Rect.from_points(w.facilities, w.users)
+    sizes = [
+        build_scene(w.facilities, qi, w.k, rect, users_hint=w.users).n_tris
+        for qi in w.qs
+    ]
+    return float(max(np.mean(sizes), 1.0))
+
+
+def measure_backend(
+    w: Workload, backend: str, repeats: int = 2
+) -> tuple[float, float]:
+    """(t_filter_s, t_verify_s) for one batched call of ``backend``."""
+    from repro.core.rknn import rt_rknn_query_batch
+
+    rt_rknn_query_batch(w.facilities, w.users, w.qs, w.k, backend=backend)  # warm
+    best = (np.inf, np.inf)
+    for _ in range(max(repeats, 1)):
+        r = rt_rknn_query_batch(w.facilities, w.users, w.qs, w.k, backend=backend)
+        if r.t_filter_s + r.t_verify_s < sum(best):
+            best = (r.t_filter_s, r.t_verify_s)
+    return best
+
+
+def measure_slice(w: Workload, repeats: int = 2) -> tuple[float, float]:
+    """(t_filter_s, t_verify_s) of SLICE looped over the batch's queries."""
+    from repro.core.baselines.slice import slice_rknn
+
+    best = (np.inf, np.inf)
+    for _ in range(max(repeats, 1)):
+        tf = tv = 0.0
+        for qi in w.qs:
+            _, info = slice_rknn(w.facilities, w.users, qi, w.k)
+            tf += info.get("t_filter_s", 0.0)
+            tv += info.get("t_verify_s", 0.0)
+        if tf + tv < sum(best):
+            best = (tf, tv)
+    return best
+
+
+def calibrate(
+    backends: tuple[str, ...] | None = None,
+    *,
+    scenarios: list[Scenario] | None = None,
+    fast: bool = True,
+    repeats: int = 2,
+    include_slice: bool = True,
+    seed: int = 0,
+    verbose: bool = False,
+) -> PlannerProfile:
+    """Micro-benchmark ``backends`` over the shape grid and fit a profile.
+
+    ``scenarios`` overrides the grid (tests pass tiny shapes); ``fast``
+    selects the CI-sized grid.  Returns the fitted, versioned profile —
+    the caller decides whether to save and/or activate it.
+    """
+    if backends is None:
+        from repro.core.backends import concrete_backends
+
+        backends = concrete_backends()
+    if scenarios is None:
+        scenarios = calibration_grid(fast=fast, seed=seed)
+    workloads = [sc.generate() for sc in scenarios]
+    # fit with the MEASURED mean scene size, not the (F, k)-derived
+    # estimate: an estimated m is an exact function of the other features,
+    # and fitting on it aliases the m exponent against F and k — the model
+    # then misprices any query whose actual scene size is substituted
+    shapes = [
+        WorkloadShape(
+            len(w.facilities), len(w.users), w.k, len(w.qs),
+            m_tris=_mean_scene_tris(w),
+        )
+        for w in workloads
+    ]
+
+    from repro.core.backends import get_backend
+
+    models: dict[str, BackendCostModel] = {}
+    targets = list(backends) + (["slice"] if include_slice else [])
+    for name in targets:
+        tf = np.zeros(len(workloads))
+        tv = np.zeros(len(workloads))
+        for i, w in enumerate(workloads):
+            if name == "slice":
+                tf[i], tv[i] = measure_slice(w, repeats=repeats)
+            else:
+                tf[i], tv[i] = measure_backend(w, name, repeats=repeats)
+            if verbose:
+                print(
+                    f"  {name:10s} {w.name:24s} filter={tf[i]*1e3:8.2f}ms "
+                    f"verify={tv[i]*1e3:8.2f}ms",
+                    file=sys.stderr,
+                )
+        # geometry-free methods cannot depend on the scene size — pin that
+        # exponent to zero instead of letting it alias against |F|
+        scene_free = name == "slice" or not get_backend(name).uses_scene
+        models[name] = BackendCostModel.fit(
+            name, shapes, tf, tv, drop=("log_m",) if scene_free else ()
+        )
+
+    return PlannerProfile(
+        models=models,
+        version=PROFILE_VERSION,
+        created_at=time.time(),
+        hardware=hardware_fingerprint(),
+        source="calibrated",
+        meta={
+            "n_shapes": len(workloads),
+            "repeats": repeats,
+            "fast": fast,
+            "backends": list(targets),
+        },
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--out", default=None, help="profile path (default: store)")
+    ap.add_argument("--full", action="store_true", help="full shape grid")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--no-slice", action="store_true")
+    ap.add_argument(
+        "--activate", action="store_true",
+        help="install as the process-wide active profile after saving",
+    )
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    prof = calibrate(
+        fast=not args.full,
+        repeats=args.repeats,
+        include_slice=not args.no_slice,
+        verbose=args.verbose,
+    )
+    path = prof.save(args.out or default_profile_path())
+    if args.activate:
+        set_active_profile(prof)
+    print(
+        f"calibrated {len(prof.models)} backends on "
+        f"{prof.meta['n_shapes']} shapes in {time.perf_counter() - t0:.1f}s "
+        f"-> {path}",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,299 @@
+"""Versioned JSON store for fitted planner profiles + the active profile.
+
+A :class:`PlannerProfile` bundles one :class:`BackendCostModel` per
+backend name (including the ``"slice"`` pseudo-backend used by the hybrid
+RT-vs-SLICE frontier in :func:`repro.core.hybrid.choose_engine`), stamped
+with a schema version and a hardware fingerprint so a profile calibrated
+on one machine is never silently trusted on another kind of hardware.
+
+Process-wide state: :func:`set_active_profile` / :func:`get_active_profile`
+install the profile the ``auto`` backend and ``choose_engine`` consult.
+With no active (or stored) profile, :func:`builtin_profile` supplies a
+prior — the old hard-coded cost constants generalized to every built-in
+backend by fitting the power-law models to analytic formulas over a shape
+grid — so the planner always has *an* opinion, just a less trustworthy
+one than calibration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import threading
+
+import numpy as np
+
+from repro.planner.models import BackendCostModel, WorkloadShape, est_scene_tris
+
+__all__ = [
+    "PROFILE_VERSION",
+    "PlannerProfile",
+    "builtin_profile",
+    "get_active_profile",
+    "set_active_profile",
+    "profile_epoch",
+    "load_profile",
+    "default_profile_path",
+]
+
+PROFILE_VERSION = 1
+
+#: Environment override for where profiles live by default.
+_PROFILE_ENV = "REPRO_PLANNER_PROFILE"
+
+
+def default_profile_path() -> str:
+    env = os.environ.get(_PROFILE_ENV)
+    if env:
+        return env
+    cache = os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+    return os.path.join(cache, "repro", "planner_profile.json")
+
+
+def hardware_fingerprint() -> dict:
+    """Coarse machine identity recorded alongside fitted coefficients."""
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        accel = {"platform": dev.platform, "device_kind": dev.device_kind,
+                 "n_devices": jax.device_count()}
+    except Exception:  # noqa: BLE001 — profile IO must not require a device
+        accel = {"platform": "unknown", "device_kind": "unknown", "n_devices": 0}
+    return {
+        "machine": platform.machine(),
+        "system": platform.system(),
+        "python": platform.python_version(),
+        **accel,
+    }
+
+
+@dataclasses.dataclass
+class PlannerProfile:
+    """One calibrated (or prior) set of per-backend cost models."""
+
+    models: dict[str, BackendCostModel]
+    version: int = PROFILE_VERSION
+    created_at: float = 0.0  # unix seconds; 0 for the built-in prior
+    hardware: dict = dataclasses.field(default_factory=dict)
+    source: str = "calibrated"  # "calibrated" | "builtin-prior"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # ---- prediction ------------------------------------------------------
+    def backends(self) -> tuple[str, ...]:
+        return tuple(self.models)
+
+    def predict_s(self, backend: str, shape: WorkloadShape) -> float:
+        return self.models[backend].predict_total_s(shape)
+
+    def rank(
+        self, shape: WorkloadShape, candidates: tuple[str, ...] | None = None
+    ) -> list[tuple[str, float]]:
+        """Candidates sorted cheapest-first as ``(name, predicted_s)``."""
+        names = candidates if candidates is not None else self.backends()
+        scored = [(n, self.predict_s(n, shape)) for n in names if n in self.models]
+        if not scored:
+            raise ValueError(
+                f"profile has no models for any of {names!r} "
+                f"(knows {self.backends()!r})"
+            )
+        return sorted(scored, key=lambda t: t[1])
+
+    def best_backend(
+        self, shape: WorkloadShape, candidates: tuple[str, ...] | None = None
+    ) -> tuple[str, float]:
+        return self.rank(shape, candidates)[0]
+
+    # ---- persistence -----------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "created_at": self.created_at,
+            "hardware": self.hardware,
+            "source": self.source,
+            "meta": self.meta,
+            "models": {n: m.to_json() for n, m in self.models.items()},
+        }
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "PlannerProfile":
+        version = int(obj.get("version", -1))
+        if version != PROFILE_VERSION:
+            raise ValueError(
+                f"planner profile version {version} is not supported "
+                f"(expected {PROFILE_VERSION}); re-run calibration"
+            )
+        return cls(
+            models={
+                n: BackendCostModel.from_json(m)
+                for n, m in obj.get("models", {}).items()
+            },
+            version=version,
+            created_at=float(obj.get("created_at", 0.0)),
+            hardware=dict(obj.get("hardware", {})),
+            source=str(obj.get("source", "calibrated")),
+            meta=dict(obj.get("meta", {})),
+        )
+
+
+def load_profile(path: str | None = None) -> PlannerProfile:
+    """Load a stored profile, warning when its hardware fingerprint does
+    not match this machine (fitted constants are hardware-specific — a
+    foreign profile still loads, but never silently)."""
+    with open(path or default_profile_path()) as f:
+        prof = PlannerProfile.from_json(json.load(f))
+    if prof.hardware:
+        here = hardware_fingerprint()
+        mismatched = {
+            key: (prof.hardware.get(key), here.get(key))
+            for key in ("platform", "device_kind", "machine")
+            if key in prof.hardware and prof.hardware.get(key) != here.get(key)
+        }
+        if mismatched:
+            import warnings
+
+            warnings.warn(
+                f"planner profile was calibrated on different hardware "
+                f"({mismatched}); its cost constants are likely wrong here "
+                f"— re-run repro.planner.calibrate",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    return prof
+
+
+# --------------------------------------------------------------------------
+# active profile (process-wide)
+# --------------------------------------------------------------------------
+
+_active_lock = threading.Lock()
+_active: PlannerProfile | None = None
+_epoch = 0
+
+
+def set_active_profile(profile: PlannerProfile | None) -> None:
+    global _active, _epoch
+    with _active_lock:
+        _active = profile
+        _epoch += 1
+
+
+def get_active_profile() -> PlannerProfile | None:
+    """The installed profile, or ``None`` (callers fall back to the prior)."""
+    with _active_lock:
+        return _active
+
+
+def profile_epoch() -> int:
+    """Bumped on every :func:`set_active_profile` — cached planner
+    decisions key on it so recalibration invalidates them."""
+    with _active_lock:
+        return _epoch
+
+
+# --------------------------------------------------------------------------
+# built-in prior
+# --------------------------------------------------------------------------
+
+_builtin: PlannerProfile | None = None
+
+
+def _prior_times(name: str, s: WorkloadShape) -> tuple[float, float]:
+    """Analytic (filter_s, verify_s) priors per batch on CPU-class hardware.
+
+    Shapes (not absolute values) are what matter: they encode which terms
+    dominate each backend — scene builds for geometric paths, the |F|·|U|
+    distance matrix for brute, interpret-mode overhead for the Pallas
+    kernel, the SLICE arc filter for the hybrid frontier.  The constants
+    descend from the measured ``bench_output.txt`` frontier that used to
+    live hard-coded in ``choose_engine``; calibration replaces all of this
+    with on-hardware fits.
+    """
+    f, u, k, q = float(s.n_facilities), float(s.n_users), float(s.k), float(s.q)
+    m = s.m() if s.m_tris is not None else est_scene_tris(s.n_facilities, s.k)
+    scene = 2e-4 + 1.0e-6 * f + 1.5e-5 * m  # prune + occluder fan, per query
+    if name in ("dense", "dense-ref"):
+        slow = 40.0 if name == "dense" else 1.0  # interpret-mode penalty
+        return q * scene, slow * (3e-4 + 4e-9 * q * u * m)
+    if name == "grid":
+        return q * (scene + 2e-3 + 4e-5 * m), 5e-4 + 1.2e-8 * q * u * max(m / 6.0, 4.0)
+    if name == "bvh":
+        # per-lane while_loop under vmap: SIMD-hostile, pays ~O(m) per user
+        return q * (scene + 5e-4 + 1.2e-5 * m), 1e-3 + 1.5e-7 * q * u * m
+    if name == "brute":
+        return 1e-5, 3e-4 + 5e-9 * q * u * f
+    if name == "slice":
+        # old choose_engine constants: 0.002·F filter, 0.4·k^1.5·(U/F) verify (ms)
+        return q * (1e-3 + 2e-6 * f), q * 4e-7 * (k**1.5) * (u / max(f, 1.0))
+    raise KeyError(name)
+
+
+_PRIOR_BACKENDS = ("dense", "dense-ref", "grid", "bvh", "brute", "slice")
+
+
+def builtin_profile() -> PlannerProfile:
+    """The no-calibration fallback: power-law models fitted to the analytic
+    priors over a shape grid (cached; deterministic)."""
+    global _builtin
+    if _builtin is not None:
+        return _builtin
+    shapes = [
+        WorkloadShape(f, u, k, q, m_tris=mt)
+        for f in (30, 100, 1_000, 10_000)
+        for u in (1_000, 20_000, 1_000_000)
+        for k in (1, 10, 100)
+        for q in (1, 16, 128)
+        for mt in (None, est_scene_tris(f, k) * 2.0)
+    ]
+    models = {}
+    for name in _PRIOR_BACKENDS:
+        times = np.array([_prior_times(name, s) for s in shapes])
+        models[name] = BackendCostModel.fit(name, shapes, times[:, 0], times[:, 1])
+    _builtin = PlannerProfile(
+        models=models,
+        created_at=0.0,
+        hardware={},
+        source="builtin-prior",
+        meta={"note": "analytic priors; run repro.planner.calibrate to replace"},
+    )
+    return _builtin
+
+
+_disk_checked = False
+
+
+def active_or_builtin() -> PlannerProfile:
+    """The profile the planner actually uses: the active one, else (once
+    per process) a ``REPRO_PLANNER_PROFILE`` file if the operator pointed
+    the env var at one, else the analytic built-in prior."""
+    prof = get_active_profile()
+    if prof is not None:
+        return prof
+    global _disk_checked
+    if not _disk_checked:
+        _disk_checked = True
+        if os.environ.get(_PROFILE_ENV):
+            prof = activate_from_disk()
+            if prof is not None:
+                return prof
+    return builtin_profile()
+
+
+def activate_from_disk(path: str | None = None) -> PlannerProfile | None:
+    """Best-effort load-and-activate (missing/stale files return ``None``)."""
+    try:
+        prof = load_profile(path)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return None
+    set_active_profile(prof)
+    return prof

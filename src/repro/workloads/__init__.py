@@ -1,0 +1,19 @@
+"""Scenario workload generators for calibration and regime benchmarks."""
+
+from repro.workloads.scenarios import (
+    SCENARIOS,
+    Scenario,
+    Workload,
+    calibration_grid,
+    get_scenario,
+    scenario_names,
+)
+
+__all__ = [
+    "Scenario",
+    "Workload",
+    "SCENARIOS",
+    "get_scenario",
+    "scenario_names",
+    "calibration_grid",
+]

@@ -297,9 +297,32 @@ def test_engine_mesh_sharded_dense_dispatch():
     # stream goes through the same sharded dispatch
     for qb, masks in eng_mesh.stream([qs], 5):
         np.testing.assert_array_equal(masks, b.masks)
-    # non-dense backends fall back to the unsharded dispatch
-    g = eng_mesh.query_batch(qs, 5, backend="grid")
-    np.testing.assert_array_equal(g.masks, b.masks)
+
+
+def test_engine_mesh_shards_grid_and_bvh_dispatch():
+    """The grid and bvh batched dispatches shard the same way dense-ref
+    does (users over data axes, queries over 'model') and stay
+    bit-identical to the meshless engine — including when N is not a
+    multiple of the DP degree (sentinel users sliced off)."""
+    from repro.launch.mesh import make_mesh_for_devices
+
+    F, U, rng = _instance(89, M=40, N=257)
+    mesh = make_mesh_for_devices(1, model_axis=1)
+    eng_mesh = RkNNEngine(F, U, mesh=mesh)
+    eng_plain = RkNNEngine(F, U)
+    qs = [int(q) for q in rng.integers(0, len(F), 4)]
+    for backend in ("grid", "bvh"):
+        a = eng_mesh.query_batch(qs, 5, backend=backend)
+        b = eng_plain.query_batch(qs, 5, backend=backend)
+        np.testing.assert_array_equal(a.masks, b.masks)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        for i, qi in enumerate(qs):
+            np.testing.assert_array_equal(a.masks[i], rknn_brute_np(U, F, qi, 5))
+        # the sharded jitted step was actually built and used
+        assert any(key[0] == backend for key in eng_mesh._mesh_steps)
+    # brute stays single-device (no sharded step registered)
+    eng_mesh.query_batch(qs, 5, backend="brute")
+    assert not any(key[0] == "brute" for key in eng_mesh._mesh_steps)
 
 
 # ------------------------------------------------------------ kernel wrappers

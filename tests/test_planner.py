@@ -1,0 +1,423 @@
+"""The adaptive query planner: ``auto`` backend, profiles, calibration.
+
+Covers the planner-PR acceptance surface:
+
+* ``auto`` mask-equivalence against every forced concrete backend
+  (single + batch; masks are the query answer — raw counts are
+  backend-specific diagnostics and may differ across routes);
+* calibration profile save/load round-trip (versioned JSON store);
+* batch-split recombination correctness on a forced mixed assignment;
+* ``explain()`` / ``EngineStats`` plan surfacing;
+* ``choose_engine`` profile lookup + warn-once hard-coded fallback;
+* power-law fit machinery recovering known exponents.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.core.hybrid as hybrid
+from repro.core.backends import QueryRequest, available_backends, get_backend
+from repro.core.brute import rknn_brute_np
+from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.core.hybrid import choose_engine
+from repro.core.rknn import BACKENDS, rt_rknn_query, rt_rknn_query_batch
+from repro.planner.backend import PlannerBackend
+from repro.planner.models import (
+    FEATURE_NAMES,
+    BackendCostModel,
+    CostModel,
+    WorkloadShape,
+    est_scene_tris,
+)
+from repro.planner.profiles import (
+    PROFILE_VERSION,
+    PlannerProfile,
+    builtin_profile,
+    get_active_profile,
+    load_profile,
+    set_active_profile,
+)
+
+
+@pytest.fixture(autouse=True)
+def _restore_active_profile():
+    prev = get_active_profile()
+    yield
+    set_active_profile(prev)
+
+
+def _instance(seed, M=50, N=300):
+    rng = np.random.default_rng(seed)
+    return rng.random((M, 2)), rng.random((N, 2)), rng
+
+
+# ------------------------------------------------------------------ registry
+def test_auto_registered_as_meta_backend():
+    assert "auto" in available_backends()
+    assert "auto" not in BACKENDS  # concrete-backend lists exclude meta
+    b = get_backend("auto")
+    assert b.is_meta and isinstance(b, PlannerBackend)
+    assert set(b.candidates()) <= set(BACKENDS)
+
+
+# -------------------------------------------------------------- equivalence
+def test_auto_single_query_matches_every_forced_backend():
+    F, U, rng = _instance(101)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    for q, k in ((3, 4), (int(rng.integers(0, len(F))), 2)):
+        res = eng.query(q, k)
+        assert res.backend in BACKENDS  # the concrete choice is reported
+        truth = rknn_brute_np(U, F, q, k)
+        np.testing.assert_array_equal(res.mask, truth)
+        for forced in BACKENDS:
+            np.testing.assert_array_equal(
+                eng.query(q, k, backend=forced).mask, truth
+            )
+
+
+def test_auto_batch_matches_every_forced_backend():
+    F, U, rng = _instance(103)
+    qs = [int(q) for q in rng.integers(0, len(F), 5)] + [np.array([0.4, 0.6])]
+    k = 3
+    auto = rt_rknn_query_batch(F, U, qs, k, backend="auto")
+    assert auto.backend == "auto"
+    for forced in BACKENDS:
+        forced_res = rt_rknn_query_batch(F, U, qs, k, backend=forced)
+        np.testing.assert_array_equal(auto.masks, forced_res.masks)
+
+
+def test_auto_empty_batch_and_one_shot_shim():
+    F, U, _ = _instance(107, M=20)
+    empty = rt_rknn_query_batch(F, U, [], 3, backend="auto")
+    assert empty.masks.shape == (0, len(U))
+    single = rt_rknn_query(F, U, 2, 3, backend="auto")
+    np.testing.assert_array_equal(single.mask, rknn_brute_np(U, F, 2, 3))
+
+
+def test_auto_mono_query():
+    P = np.random.default_rng(109).random((40, 2))
+    eng = RkNNEngine(P, P, RkNNConfig(backend="auto"))
+    res = eng.query_mono(7, 3)
+    from repro.core.brute import rknn_mono_brute_np
+
+    np.testing.assert_array_equal(res.mask, rknn_mono_brute_np(P, 7, 3))
+
+
+def test_auto_stream_matches_brute_oracle():
+    F, U, _ = _instance(113)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    for qb, masks in eng.stream([[1, 2], [3]], 4):
+        for qi, m in zip(qb, masks):
+            np.testing.assert_array_equal(m, rknn_brute_np(U, F, int(qi), 4))
+    assert eng.explain()[-1]["mode"] == "stream-batch"
+
+
+# ------------------------------------------------------------------ explain
+def test_explain_and_planner_stats():
+    F, U, rng = _instance(127)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    res = eng.query(1, 3)
+    plans = eng.explain()
+    assert len(plans) == 1
+    p = plans[0]
+    assert p["mode"] == "single" and p["backend"] == res.backend
+    assert p["predicted_s"] > 0 and p["observed_s"] > 0
+    assert set(p["candidates"]) == set(BACKENDS)
+    assert get_backend("auto").explain() == p  # planner keeps the last plan
+    qs = [int(q) for q in rng.integers(0, len(F), 4)]
+    eng.query_batch(qs, 3)
+    p2 = eng.explain()[-1]
+    assert p2["mode"] == "batch" and len(p2["assignments"]) == len(qs)
+    assert sum(eng.stats.planner_decisions.values()) == 1 + len(qs)
+    assert eng.stats.planner_pred_s > 0 and eng.stats.planner_obs_s > 0
+
+
+def test_auto_repeat_batch_hits_plan_cache():
+    F, U, rng = _instance(131)
+    qs = [int(q) for q in rng.integers(0, len(F), 6)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    a = eng.query_batch(qs, 4)
+    b = eng.query_batch(qs, 4)
+    assert eng.stats.batch_cache_hits >= 1
+    assert eng.explain()[-1].get("plan_cache_hit")
+    np.testing.assert_array_equal(a.masks, b.masks)
+
+
+# ------------------------------------------------------- batch splitting
+def test_batch_split_recombination_mixed_backends(monkeypatch):
+    """A forced heterogeneous assignment (every concrete backend appears)
+    must recombine counts into the correct per-query masks."""
+    F, U, rng = _instance(137, M=60, N=400)
+    qs = [int(q) for q in rng.integers(0, len(F), 8)]
+    k = 4
+    planner = get_backend("auto")
+    rotation = ("dense-ref", "brute", "grid", "bvh")
+
+    # pre-scene: force the geometric path so scenes are built and split
+    monkeypatch.setattr(
+        PlannerBackend, "rank", lambda self, shape, candidates=None: [("dense-ref", 1.0)]
+    )
+    monkeypatch.setattr(
+        PlannerBackend,
+        "assign_batch",
+        lambda self, shapes, candidates=None: [
+            (rotation[i % len(rotation)], 1.0) for i in range(len(shapes))
+        ],
+    )
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    res = eng.query_batch(qs, k)
+    plan = eng.explain()[-1]
+    assert plan["split"] and set(plan["groups"]) == set(rotation)
+    assert plan["assignments"] == [rotation[i % len(rotation)] for i in range(len(qs))]
+    for i, qi in enumerate(qs):
+        np.testing.assert_array_equal(res.masks[i], rknn_brute_np(U, F, qi, k))
+    # recombination matches every single-backend batch too
+    for forced in rotation:
+        np.testing.assert_array_equal(
+            res.masks, rt_rknn_query_batch(F, U, qs, k, backend=forced).masks
+        )
+    assert planner.explain()["groups"] == plan["groups"]
+
+
+def test_assign_batch_consolidates_close_calls():
+    """Splits only happen on decisive predicted savings; near-ties collapse
+    to the single cheapest backend."""
+    planner = PlannerBackend()
+    close = PlannerProfile(
+        models={
+            "a": _const_model("a", 1.00),
+            "b": _const_model("b", 0.99),
+        }
+    )
+    set_active_profile(close)
+    shapes = [WorkloadShape(10, 100, 2, 1, m_tris=m) for m in (5, 50, 500)]
+    names = {n for n, _ in planner.assign_batch(shapes, candidates=("a", "b"))}
+    assert len(names) == 1  # consolidated
+
+
+def _const_model(name: str, t_s: float) -> BackendCostModel:
+    coef = np.zeros(len(FEATURE_NAMES))
+    coef[0] = np.log(t_s)
+    return BackendCostModel(
+        name=name, filter=CostModel(coef.copy() - 50), verify=CostModel(coef)
+    )
+
+
+# ------------------------------------------------------------------ profiles
+def test_profile_save_load_roundtrip(tmp_path):
+    prof = builtin_profile()
+    path = str(tmp_path / "nested" / "profile.json")
+    prof.save(path)
+    loaded = load_profile(path)
+    assert loaded.version == PROFILE_VERSION
+    assert loaded.source == prof.source
+    assert set(loaded.models) == set(prof.models)
+    for nf, nu, k, q in ((50, 1000, 5, 1), (2000, 100000, 64, 32)):
+        s = WorkloadShape(nf, nu, k, q)
+        for name in prof.models:
+            np.testing.assert_allclose(
+                loaded.predict_s(name, s), prof.predict_s(name, s), rtol=1e-9
+            )
+
+
+def test_profile_version_mismatch_rejected(tmp_path):
+    bad = builtin_profile().to_json()
+    bad["version"] = 999
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="version"):
+        load_profile(str(p))
+
+
+def test_profile_coef_shape_mismatch_rejected():
+    obj = builtin_profile().to_json()
+    obj["models"]["brute"]["verify"]["coef"] = [1.0, 2.0]
+    with pytest.raises(ValueError, match="stale profile"):
+        PlannerProfile.from_json(obj)
+
+
+def test_profile_change_invalidates_cached_plans():
+    """Activating a new profile must bump the epoch in the plan-memo key:
+    hot workloads re-plan instead of replaying stale assignments."""
+    F, U, rng = _instance(151)
+    qs = [int(q) for q in rng.integers(0, len(F), 4)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    eng.query_batch(qs, 3)
+    eng.query_batch(qs, 3)
+    assert eng.explain()[-1].get("plan_cache_hit")
+    set_active_profile(builtin_profile())  # recalibration: epoch bump
+    res = eng.query_batch(qs, 3)
+    assert not eng.explain()[-1].get("plan_cache_hit")
+    for i, qi in enumerate(qs):
+        np.testing.assert_array_equal(res.masks[i], rknn_brute_np(U, F, qi, 3))
+
+
+def test_foreign_hardware_profile_warns_on_load(tmp_path):
+    obj = builtin_profile().to_json()
+    obj["hardware"] = {"platform": "tpu", "device_kind": "TPU v9",
+                       "machine": "riscv"}
+    p = tmp_path / "foreign.json"
+    p.write_text(json.dumps(obj))
+    with pytest.warns(RuntimeWarning, match="different hardware"):
+        load_profile(str(p))
+
+
+def test_active_profile_set_get():
+    prof = builtin_profile()
+    set_active_profile(prof)
+    assert get_active_profile() is prof
+    set_active_profile(None)
+    assert get_active_profile() is None
+
+
+def test_env_var_profile_activates_on_first_use(tmp_path, monkeypatch):
+    import repro.planner.profiles as profiles
+
+    path = str(tmp_path / "env_profile.json")
+    saved = builtin_profile()
+    saved.save(path)
+    monkeypatch.setenv("REPRO_PLANNER_PROFILE", path)
+    monkeypatch.setattr(profiles, "_disk_checked", False)
+    set_active_profile(None)
+    prof = profiles.active_or_builtin()
+    assert prof.source == saved.source and get_active_profile() is prof
+
+
+def test_group_cache_distinguishes_index_from_point_query():
+    """A facility-index query and a point query at the same coordinates
+    build different scenes (exclude vs no exclude) — the planner's group
+    LRU must not serve one the other's prepared state."""
+    F, U, _ = _instance(157)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+    k = 3
+    a = eng.query_batch([5], k)
+    b = eng.query_batch([F[5].copy()], k)
+    np.testing.assert_array_equal(a.masks[0], rknn_brute_np(U, F, 5, k))
+    np.testing.assert_array_equal(b.masks[0], rknn_brute_np(U, F, F[5].copy(), k))
+    np.testing.assert_array_equal(
+        b.masks, rt_rknn_query_batch(F, U, [F[5].copy()], k).masks
+    )
+
+
+# ---------------------------------------------------------------- cost models
+def test_power_law_fit_recovers_exponents():
+    """t = c · U · Q fits exactly in log space and extrapolates 10x out."""
+    rng = np.random.default_rng(7)
+    shapes = [
+        WorkloadShape(int(f), int(u), int(k), int(q), m_tris=float(m))
+        for f, u, k, q, m in zip(
+            rng.integers(10, 1000, 24),
+            rng.integers(100, 10000, 24),
+            rng.integers(1, 64, 24),
+            rng.integers(1, 32, 24),
+            rng.integers(4, 500, 24),
+        )
+    ]
+    times = np.array([1e-7 * s.n_users * s.q for s in shapes])
+    model = CostModel.fit(shapes, times, ridge=1e-9)
+    far = WorkloadShape(5000, 200_000, 128, 256, m_tris=1000.0)
+    np.testing.assert_allclose(
+        model.predict_s(far), 1e-7 * far.n_users * far.q, rtol=0.05
+    )
+
+
+def test_fit_drop_pins_feature_exponent_to_zero():
+    shapes = [
+        WorkloadShape(10 * (i + 1), 100 * (i + 1), i + 1, 1, m_tris=7.0 * (i + 1))
+        for i in range(12)
+    ]
+    times = np.array([1e-6 * s.n_users for s in shapes])
+    model = CostModel.fit(shapes, times, drop=("log_m",))
+    assert model.coef[FEATURE_NAMES.index("log_m")] == 0.0
+
+
+def test_est_scene_tris_monotone_and_capped():
+    assert est_scene_tris(1000, 8) < est_scene_tris(1000, 64)
+    assert est_scene_tris(5, 1000) == (5 - 1) * 3.0  # capped by |F|
+    s = WorkloadShape(100, 1000, 10, 1, m_tris=17.0)
+    assert s.m() == 17.0
+
+
+# ------------------------------------------------------------- calibration
+def test_calibration_fit_and_roundtrip(tmp_path):
+    """End-to-end: micro-benchmark tiny shapes, fit, save, load, predict."""
+    from repro.planner.calibrate import calibrate
+    from repro.workloads import Scenario
+
+    tiny = [
+        Scenario("cal_a", 25, 300, 3, 2, seed=1),
+        Scenario("cal_b", 60, 600, 6, 4, distribution="uniform", seed=2),
+        Scenario("cal_c", 120, 400, 4, 1, distribution="clustered", seed=3),
+    ]
+    prof = calibrate(
+        backends=("dense-ref", "brute"),
+        scenarios=tiny,
+        repeats=1,
+        include_slice=True,
+    )
+    assert set(prof.models) == {"dense-ref", "brute", "slice"}
+    assert prof.version == PROFILE_VERSION and prof.source == "calibrated"
+    assert prof.hardware.get("platform")
+    s = WorkloadShape(100, 5000, 8, 4)
+    for name in prof.models:
+        t = prof.predict_s(name, s)
+        assert np.isfinite(t) and t > 0
+    # brute is geometry-free: its scene-size exponent is pinned to zero
+    assert prof.models["brute"].verify.coef[FEATURE_NAMES.index("log_m")] == 0.0
+    path = str(tmp_path / "cal.json")
+    prof.save(path)
+    loaded = load_profile(path)
+    np.testing.assert_allclose(
+        loaded.predict_s("brute", s), prof.predict_s("brute", s), rtol=1e-9
+    )
+    # an activated calibrated profile drives the auto backend end-to-end
+    set_active_profile(loaded)
+    F, U, _ = _instance(139)
+    res = RkNNEngine(F, U, RkNNConfig(backend="auto")).query(1, 3)
+    np.testing.assert_array_equal(res.mask, rknn_brute_np(U, F, 1, 3))
+
+
+# ------------------------------------------------------------ choose_engine
+def test_choose_engine_uses_active_profile():
+    rigged_slice = PlannerProfile(
+        models={"dense-ref": _const_model("dense-ref", 1.0),
+                "slice": _const_model("slice", 1e-6)}
+    )
+    set_active_profile(rigged_slice)
+    # RT regime under the old constants — the profile overrides it
+    assert choose_engine(100, 1_000_000, 25) == "slice"
+    rigged_rt = PlannerProfile(
+        models={"dense-ref": _const_model("dense-ref", 1e-6),
+                "slice": _const_model("slice", 1.0)}
+    )
+    set_active_profile(rigged_rt)
+    assert choose_engine(10_000, 100_000, 1) == "rt"
+
+
+def test_choose_engine_fallback_warns_once_and_keeps_frontier():
+    set_active_profile(None)
+    hybrid._warned_no_profile = False
+    with pytest.warns(RuntimeWarning, match="no active planner profile"):
+        assert choose_engine(100, 1_000_000, 25) == "rt"
+    # warn-once: subsequent calls are silent and keep the old frontier
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert choose_engine(10_000, 100_000, 1) == "slice"
+
+
+# ------------------------------------------------------- direct protocol use
+def test_planner_direct_protocol_geometry_free():
+    F, U, _ = _instance(149)
+    planner = get_backend("auto")
+    counts = planner.count(
+        QueryRequest(
+            xs=None, ys=None, k=3,
+            users=U, facilities=F, q_pt=F[2], exclude=2,
+        )
+    )
+    np.testing.assert_array_equal(counts < 3, rknn_brute_np(U, F, 2, 3))
+    assert planner.explain()["mode"] == "direct-single"

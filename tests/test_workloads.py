@@ -1,0 +1,66 @@
+"""Scenario workload generators (repro.workloads)."""
+
+import numpy as np
+import pytest
+
+from repro.workloads import (
+    SCENARIOS,
+    Scenario,
+    calibration_grid,
+    get_scenario,
+    scenario_names,
+)
+
+
+def test_registry_covers_the_papers_hard_regimes():
+    names = scenario_names()
+    for required in ("sparse_facility", "dense_user", "large_k"):
+        assert required in names
+    # distribution ablations present
+    assert {SCENARIOS[n].distribution for n in names} >= {"road", "clustered"}
+    with pytest.raises(ValueError, match="scenario must be one of"):
+        get_scenario("nope")
+
+
+def test_generate_matches_spec_and_is_deterministic():
+    sc = get_scenario("sparse_facility")
+    w1 = sc.generate(scale=0.1)
+    w2 = sc.generate(scale=0.1)
+    assert w1.shape == (sc.n_facilities, max(int(sc.n_users * 0.1), 64), sc.k, sc.q)
+    np.testing.assert_array_equal(w1.facilities, w2.facilities)
+    np.testing.assert_array_equal(w1.users, w2.users)
+    assert w1.qs == w2.qs
+    assert all(0 <= qi < len(w1.facilities) for qi in w1.qs)
+
+
+def test_scale_floor_keeps_workloads_nonempty():
+    w = get_scenario("dense_user").generate(scale=1e-9)
+    assert len(w.users) == 64
+
+
+@pytest.mark.parametrize(
+    "distribution", ["road", "uniform", "clustered", "gaussian", "mixed"]
+)
+def test_distributions_stay_in_unit_square(distribution):
+    w = Scenario("t", 30, 500, 4, 2, distribution=distribution, seed=3).generate()
+    pts = np.concatenate([w.facilities, w.users])
+    assert len(pts) == 530
+    assert pts.min() >= 0.0 and pts.max() <= 1.0
+
+
+def test_unknown_distribution_raises():
+    with pytest.raises(ValueError, match="distribution must be"):
+        Scenario("t", 10, 100, 2, 1, distribution="fractal").generate()
+
+
+def test_calibration_grid_spans_axes_and_rotates_distributions():
+    fast = calibration_grid(fast=True)
+    full = calibration_grid(fast=False)
+    assert 0 < len(fast) < len(full)
+    for grid in (fast, full):
+        fs = {s.n_facilities for s in grid}
+        ks = {s.k for s in grid}
+        qs = {s.q for s in grid}
+        assert len(fs) >= 3 and len(ks) >= 3 and len(qs) >= 2
+    # m-decorrelation: more than one point distribution in the grid
+    assert len({s.distribution for s in fast}) >= 2
