@@ -400,16 +400,28 @@ def scenario_sweep(
     runtime, ``auto`` exploiting it is the planner working as intended.
     """
     import collections
+    import os
 
     from repro.core.backends import get_backend
     from repro.planner.calibrate import calibrate
-    from repro.planner.profiles import get_active_profile, set_active_profile
+    from repro.planner.profiles import (
+        get_active_profile,
+        load_runner_profile,
+        runner_class,
+        set_active_profile,
+    )
     from repro.workloads import SCENARIOS
 
     fixed = ("dense-ref", "grid", "bvh", "brute")
     prev = get_active_profile()
     t0 = time.perf_counter()
-    profile = calibrate(fast=True, repeats=2)
+    # a committed runner-class profile (benchmarks/profiles/<class>.json)
+    # stands in for on-the-fly calibration when this machine matches it
+    store = os.path.join(os.path.dirname(os.path.abspath(__file__)), "profiles")
+    profile = load_runner_profile(store)
+    prof_src = f"profile:{runner_class()}" if profile is not None else "calibrated"
+    if profile is None:
+        profile = calibrate(fast=True, repeats=2)
     t_cal = time.perf_counter() - t0
     set_active_profile(profile)
     rows = []
@@ -467,12 +479,96 @@ def scenario_sweep(
                 derived=(
                     f"beats_all={beats_all} chosen={dict(chosen_all)} "
                     + " ".join(f"{b}={totals[b]*1e3:.0f}ms" for b in others)
-                    + f" calibration={t_cal:.1f}s"
+                    + f" calibration={t_cal:.1f}s source={prof_src}"
                 ),
             )
         )
     finally:
         set_active_profile(prev)
+    return rows
+
+
+# ------------------------------------------- dynamic update streams (ours)
+def update_throughput(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+    """Refit vs rebuild-from-scratch under update streams (ISSUE 4).
+
+    A standing Q-query workload is re-issued after every update step.  The
+    *refit* side is one long-lived :class:`repro.dynamic.DynamicEngine`
+    absorbing deltas through ``apply_updates`` (scene survival / refit /
+    device-array scatter); the *rebuild* side constructs a cold
+    ``RkNNEngine`` from the post-update snapshot each step — what every
+    pre-dynamic caller had to do.  Masks are asserted identical step by
+    step.  Streams cover the churn regimes of ``repro.workloads.updates``:
+    low/high user drift, facility jitter (the scene-refit showcase), and
+    facility churn.  Acceptance: refit beats rebuild at low churn
+    (``win=True`` in ``derived``; committed in BENCH_4.json).
+    """
+    from repro.dynamic import DynamicEngine, apply_to_points
+    from repro.workloads import drifting_users, facility_churn, facility_jitter
+
+    F, U = _fu("NY", 400, scale)
+    # pin the hull with corner facilities so interior churn keeps the rect
+    lo, hi = np.concatenate([F, U]).min(0), np.concatenate([F, U]).max(0)
+    F = np.concatenate(
+        [[[lo[0], lo[1]], [lo[0], hi[1]], [hi[0], lo[1]], [hi[0], hi[1]]], F]
+    )
+    rng = np.random.default_rng(12)
+    q_n = n_queries or 8
+    qs = [int(q) for q in rng.integers(4, len(F), q_n)]
+    k = 10
+    steps = 4
+    streams = {
+        "drift_lo": drifting_users(U, steps=steps, frac=0.01, seed=0),
+        "drift_hi": drifting_users(U, steps=steps, frac=0.25, seed=1),
+        # the hull-pinning corner rows 0-3 are protected alongside the
+        # query ids — deleting a corner would shrink the rect and purge
+        # the cache, turning the row into a rebuild measurement
+        "fjitter": facility_jitter(F, steps=steps, frac=0.02, seed=2,
+                                   protect=np.concatenate([np.arange(4), qs])),
+        "fchurn": facility_churn(F, steps=steps, rate=0.02, seed=3,
+                                 protect=np.concatenate([np.arange(4), qs])),
+    }
+    backend = "grid"  # index-heaviest filter phase: refit has the most to save
+    rows = []
+    for name, stream in streams.items():
+        dyn = DynamicEngine(F, U, RkNNConfig(backend=backend))
+        dyn.query_batch(qs, k)  # warm jit + caches
+        t_refit = 0.0
+        masks_refit = []
+        t0 = time.perf_counter()
+        for batch in stream:
+            dyn.apply_updates(batch)
+            masks_refit.append(dyn.query_batch(qs, k).masks)
+        t_refit = time.perf_counter() - t0
+
+        Fc, Uc = F.copy(), U.copy()
+        t0 = time.perf_counter()
+        for i, batch in enumerate(stream):
+            Fc, _ = apply_to_points(
+                Fc, batch.facility_insert, batch.facility_delete, batch.facility_move
+            )
+            Uc, _ = apply_to_points(
+                Uc, batch.user_insert, batch.user_delete, batch.user_move
+            )
+            cold = RkNNEngine(Fc, Uc, RkNNConfig(backend=backend))
+            masks = cold.query_batch(qs, k).masks
+            assert np.array_equal(masks, masks_refit[i]), (name, i)
+        t_rebuild = time.perf_counter() - t0
+
+        st = dyn.update_stats
+        rows.append(
+            dict(
+                name=f"update_{name}_{backend}",
+                us_per_call=t_refit / (steps * q_n) * 1e6,
+                derived=(
+                    f"rebuild={t_rebuild*1e3:.1f}ms refit={t_refit*1e3:.1f}ms "
+                    f"speedup={t_rebuild/max(t_refit,1e-9):.2f}x win={t_refit < t_rebuild} "
+                    f"survived={st.scenes_survived} refit={st.scenes_refit} "
+                    f"dropped={st.scenes_dropped} idx_refit={st.indexes_refit} "
+                    f"scatters={st.user_scatters}"
+                ),
+            )
+        )
     return rows
 
 

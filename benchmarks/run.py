@@ -40,6 +40,7 @@ BENCHES = [
     ("batch", bench_rknn.batch_throughput),
     ("engine", bench_rknn.engine_amortization),
     ("scenario_sweep", bench_rknn.scenario_sweep),
+    ("update_throughput", bench_rknn.update_throughput),
     ("mono", bench_rknn.mono_queries),
 ]
 

@@ -40,12 +40,19 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.bvh import build_bvh, bvh_hit_counts, bvh_hit_counts_batch, stack_bvhs
+from repro.core.bvh import (
+    build_bvh,
+    bvh_hit_counts,
+    bvh_hit_counts_batch,
+    refit_bvh,
+    stack_bvhs,
+)
 from repro.core.geometry import Rect
 from repro.core.grid import (
     build_grid,
     grid_hit_counts_batch_jnp,
     grid_hit_counts_jnp,
+    refit_grid,
     stack_grids,
 )
 from repro.core.scene import Scene, pad_scene_arrays
@@ -131,6 +138,29 @@ class Backend:
     def build_index(self, scene: Scene, *, grid_g: int = 64):
         """Host-side per-scene index build (grid/BVH); ``None`` if unused."""
         return None
+
+    def refit_index(
+        self,
+        index,
+        old_scene: Scene,
+        new_scene: Scene,
+        changed: np.ndarray,
+        *,
+        grid_g: int = 64,
+    ) -> tuple[Any, bool]:
+        """Adapt ``index`` (built for ``old_scene``) to ``new_scene``.
+
+        ``changed`` lists the real-triangle ids whose geometry differs; all
+        other triangles are bit-identical between the scenes (the dynamic
+        subsystem's scene-refit contract).  Returns ``(new_index, refit)``
+        where ``refit`` is True when the index was adapted in place rather
+        than rebuilt.  The default — and the fallback of every override
+        whose cheap path does not apply — is a fresh :meth:`build_index`.
+        Either way the returned index must count exactly like a fresh
+        build (grid counts are order-independent, BVH boxes stay
+        conservative), so refit never changes query results.
+        """
+        return self.build_index(new_scene, grid_g=grid_g), False
 
     def prepare_batch(self, req: BatchRequest):
         """Host-side batch stacking; the returned object is what
@@ -246,6 +276,29 @@ class GridBackend(Backend):
             G=grid_g,
         )
 
+    def refit_index(
+        self,
+        index,
+        old_scene: Scene,
+        new_scene: Scene,
+        changed: np.ndarray,
+        *,
+        grid_g: int = 64,
+    ):
+        if index is not None and index.G == grid_g:
+            n = old_scene.n_tris
+            g = refit_grid(
+                index,
+                old_scene.tris[:n],
+                old_scene.coeffs[:n],
+                new_scene.tris[: new_scene.n_tris],
+                new_scene.coeffs[: new_scene.n_tris],
+                changed,
+            )
+            if g is not None:
+                return g, True
+        return self.build_index(new_scene, grid_g=grid_g), False
+
     def count(self, req: QueryRequest) -> np.ndarray:
         g = req.index
         if g is None:
@@ -284,6 +337,21 @@ class BvhBackend(Backend):
 
     def build_index(self, scene: Scene, *, grid_g: int = 64):
         return build_bvh(scene.tris[: scene.n_tris])
+
+    def refit_index(
+        self,
+        index,
+        old_scene: Scene,
+        new_scene: Scene,
+        changed: np.ndarray,
+        *,
+        grid_g: int = 64,
+    ):
+        if index is not None:
+            bvh = refit_bvh(index, new_scene.tris[: new_scene.n_tris])
+            if bvh is not None:
+                return bvh, True
+        return self.build_index(new_scene, grid_g=grid_g), False
 
     def count(self, req: QueryRequest) -> np.ndarray:
         bvh = req.index

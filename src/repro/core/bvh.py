@@ -31,6 +31,7 @@ from jax import lax
 __all__ = [
     "BVH",
     "build_bvh",
+    "refit_bvh",
     "bvh_hit_counts",
     "stack_bvhs",
     "bvh_hit_counts_batch",
@@ -147,6 +148,60 @@ def build_bvh(tris: np.ndarray) -> BVH:
         stack.append((r_id, mid, e))
 
     return BVH(left=left, right=right, bbox=bbox.astype(np.float32), n_tris=M)
+
+
+def refit_bvh(
+    bvh: BVH, tris_new: np.ndarray, *, max_growth: float = 1.5
+) -> BVH | None:
+    """Refit node AABBs to perturbed triangles, keeping the topology.
+
+    The graphics-pipeline *refit* operation: when primitives move slightly,
+    the tree structure is reused and only the boxes are recomputed
+    bottom-up (children are always allocated after their parent, so
+    descending node ids are a valid child-before-parent order).  Traversal
+    counts are unaffected by stale topology — boxes stay conservative, so
+    a refit BVH is count-identical to a fresh Morton-ordered rebuild.
+
+    Quality gate: Morton order goes stale as primitives drift, inflating
+    the boxes and the traversal cost.  When the total internal-node box
+    area grows past ``max_growth``× the pre-refit area, ``None`` is
+    returned and the caller should rebuild.  Also returns ``None`` when
+    the triangle count changed (topology no longer matches).
+    """
+    tris_new = np.asarray(tris_new, dtype=np.float64)
+    if bvh.n_tris != len(tris_new):
+        return None
+    if bvh.n_tris == 0:
+        return BVH(bvh.left.copy(), bvh.right.copy(), bvh.bbox.copy(), 0)
+    lo = tris_new.min(axis=1)  # [M, 2]
+    hi = tris_new.max(axis=1)
+    n = bvh.n_nodes
+    bbox = np.zeros((n, 4), np.float64)
+    left, right = bvh.left, bvh.right
+    for node in range(n - 1, -1, -1):
+        l = int(left[node])
+        if l < 0:  # leaf: one primitive
+            tri = -l - 1
+            bbox[node, :2] = lo[tri]
+            bbox[node, 2:] = hi[tri]
+        else:
+            r = int(right[node])
+            bbox[node, :2] = np.minimum(bbox[l, :2], bbox[r, :2])
+            bbox[node, 2:] = np.maximum(bbox[l, 2:], bbox[r, 2:])
+    internal = left >= 0
+    if internal.any():
+        old = bvh.bbox.astype(np.float64)
+        area_old = float(
+            ((old[internal, 2] - old[internal, 0])
+             * (old[internal, 3] - old[internal, 1])).sum()
+        )
+        area_new = float(
+            ((bbox[internal, 2] - bbox[internal, 0])
+             * (bbox[internal, 3] - bbox[internal, 1])).sum()
+        )
+        if area_new > max_growth * area_old + 1e-12:
+            return None
+    return BVH(left.copy(), right.copy(), bbox.astype(np.float32), bvh.n_tris)
 
 
 def bvh_hit_counts(

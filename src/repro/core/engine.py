@@ -96,6 +96,9 @@ class RkNNConfig:
     scene_cache: int = 256
     batch_cache: int = 8
     pad_scene_to: int = 128
+    #: Feed the planner's observed-vs-predicted residuals back into the
+    #: active profile's coefficients (damped; ``auto`` backend only).
+    online_recalibration: bool = False
 
 
 @dataclasses.dataclass
@@ -117,6 +120,7 @@ class EngineStats:
     planner_decisions: dict = dataclasses.field(default_factory=dict)
     planner_pred_s: float = 0.0
     planner_obs_s: float = 0.0
+    planner_recal_nudges: int = 0
 
 
 def _next_pow2(n: int) -> int:
@@ -519,6 +523,8 @@ class RkNNEngine:
         self.stats.planner_pred_s += plan.get("predicted_s", 0.0)
         self.stats.planner_obs_s += observed_s
         planner.record(plan)
+        if self.config.online_recalibration:
+            self.stats.planner_recal_nudges += planner.observe(plan)
 
     def explain(self) -> list[dict]:
         """Recent ``auto`` plans, oldest first: each entry carries the
@@ -972,6 +978,7 @@ class RkNNEngine:
                             "backend": choice,
                             "predicted_s": pred,
                             "candidates": costs,
+                            "cache_hit": shape.cache_hit,
                             "decisions": {choice: len(qs)},
                         }
                         b_eff = get_backend(choice)

@@ -36,6 +36,7 @@ from repro.core.geometry import Rect
 __all__ = [
     "OccluderGrid",
     "build_grid",
+    "refit_grid",
     "grid_hit_counts_jnp",
     "stack_grids",
     "grid_hit_counts_batch_jnp",
@@ -166,6 +167,59 @@ def build_grid(
         G=G,
         rect=rect,
     )
+
+
+def refit_grid(
+    grid: OccluderGrid,
+    tris_old: np.ndarray,
+    coeffs_old: np.ndarray,
+    tris_new: np.ndarray,
+    coeffs_new: np.ndarray,
+    changed: np.ndarray,
+) -> OccluderGrid | None:
+    """Refit a grid index for a perturbed triangle set without a full rebuild.
+
+    ``changed`` lists triangle ids whose geometry differs between the old
+    arrays (the ones ``grid`` was built from) and the new ones; all other
+    triangles must be identical.  Each changed triangle's old cell
+    classification is subtracted and its new one added — O(|changed|)
+    classification work instead of O(M).  Counts are exact regardless of
+    list order (``hits = base + #inside-of-listed``), so a refit grid is
+    count-identical to a fresh :func:`build_grid`.
+
+    Returns a new :class:`OccluderGrid` (the input is never mutated — cached
+    scenes may still alias it), or ``None`` when the refit cannot be done in
+    place (triangle count changed, or a cell's candidate list would overflow
+    the padded width) — the caller falls back to :func:`build_grid`.
+    """
+    if len(tris_old) != len(tris_new):
+        return None
+    changed = np.asarray(changed, dtype=np.int64)
+    base = grid.base.copy()
+    lists = grid.lists.copy()
+    coeffs = grid.coeffs.copy()
+    G, rect = grid.G, grid.rect
+    tris_old = np.asarray(tris_old, np.float64)
+    tris_new = np.asarray(tris_new, np.float64)
+    co_old = np.asarray(coeffs_old, np.float64)
+    co_new = np.asarray(coeffs_new, np.float64)
+    for t in changed:
+        t = int(t)
+        full_o, part_o = _tri_cell_classify(tris_old[t], co_old[t], rect, G)
+        full_n, part_n = _tri_cell_classify(tris_new[t], co_new[t], rect, G)
+        base[full_o] -= 1
+        base[full_n] += 1
+        for c in part_o:
+            row = lists[int(c)]
+            row[row == t] = -1
+        for c in part_n:
+            row = lists[int(c)]
+            slots = np.flatnonzero(row < 0)
+            if not len(slots):
+                return None  # padded width exhausted: rebuild
+            row[slots[0]] = t
+        coeffs[t] = co_new[t].astype(np.float32)
+    return OccluderGrid(base=base, lists=lists, coeffs=coeffs, G=G, rect=rect)
 
 
 def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

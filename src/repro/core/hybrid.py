@@ -67,6 +67,12 @@ class SceneCache:
         self._lock = threading.Lock()  # engine may build scenes from a pool
         self.hits = 0
         self.misses = 0
+        self.delta_kept = 0
+        self.delta_dropped = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
 
     @staticmethod
     def fingerprint(facilities: np.ndarray) -> int:
@@ -99,6 +105,37 @@ class SceneCache:
                 self._store.popitem(last=False)
             self.misses += 1
         return scene, False
+
+    def migrate(self, select, migrate) -> tuple[int, int]:
+        """Delta-aware invalidation: rewrite or drop a subset of entries.
+
+        For every entry whose key satisfies ``select(key)``, ``migrate(key,
+        scene)`` is called; a ``(new_key, new_scene)`` return re-keys the
+        entry in place (LRU position preserved), ``None`` drops it.  This
+        is how the dynamic subsystem carries scenes that provably survive
+        an update across the facility-fingerprint / rect change that would
+        otherwise strand them (stale keys are unreachable — dropping them
+        is a capacity concern, re-keying survivors is the perf win).
+        Returns ``(n_migrated, n_dropped)``.
+        """
+        kept = dropped = 0
+        with self._lock:
+            out: "collections.OrderedDict[tuple, Scene]" = collections.OrderedDict()
+            for key, scene in self._store.items():
+                if not select(key):
+                    out[key] = scene
+                    continue
+                res = migrate(key, scene)
+                if res is None:
+                    dropped += 1
+                    continue
+                new_key, new_scene = res
+                out[new_key] = new_scene
+                kept += 1
+            self._store = out
+            self.delta_kept += kept
+            self.delta_dropped += dropped
+        return kept, dropped
 
 
 _warned_no_profile = False

@@ -37,20 +37,53 @@ import numpy as np
 
 from repro.core.geometry import Rect, bisector
 
-__all__ = ["PruneStats", "prune_facilities", "STRATEGIES"]
+__all__ = ["PruneStats", "prune_facilities", "STRATEGIES", "adaptive_grid"]
 
 STRATEGIES = ("infzone", "conservative", "none")
+
+#: Adaptive coverage-grid resolution: facility sets below the threshold
+#: prune at the coarse resolution, denser ones at the fine one (measured:
+#: G=256 halves kept occluders at |F|=10^4).  The dynamic subsystem's
+#: cold-equivalence contract depends on detecting when an update crosses
+#: the threshold — always read it from here.
+ADAPTIVE_GRID_THRESHOLD = 2000
+ADAPTIVE_GRID_COARSE = 128
+ADAPTIVE_GRID_FINE = 256
+
+
+def adaptive_grid(n_facilities: int) -> int:
+    """The coverage-grid resolution ``prune_facilities`` picks for
+    ``grid=None`` at this facility count."""
+    return (
+        ADAPTIVE_GRID_COARSE
+        if n_facilities < ADAPTIVE_GRID_THRESHOLD
+        else ADAPTIVE_GRID_FINE
+    )
 
 
 @dataclasses.dataclass
 class PruneStats:
-    """Bookkeeping for benchmarks (paper Table 3 / Fig 16)."""
+    """Bookkeeping for benchmarks (paper Table 3 / Fig 16).
+
+    ``safe_radius`` is the *update-stability certificate* consumed by the
+    dynamic subsystem (:mod:`repro.dynamic`): any facility change (insert,
+    delete, or either endpoint of a move) strictly farther than this from
+    the query point provably leaves a cold re-prune — and therefore the
+    whole scene — bit-identical.  It is ``max(2·radius_final, d_max)``
+    where ``radius_final`` is the final influence-zone radius bound and
+    ``d_max`` the farthest facility the chunked pass ever examined: a
+    strictly-farther row sorts after every examined one (chunk boundaries
+    are unchanged) and is Eq. (1)-rejected by the final radius before it
+    can be processed.  ``inf`` means no change is provably safe (strategy
+    ``"none"`` keeps everything; an empty kept set never bounded the zone).
+    """
 
     n_facilities: int
     n_kept: int
     n_eq1_rejected: int
     n_cover_rejected: int
     strategy: str
+    safe_radius: float = float("inf")
 
 
 class _CoverageGrid:
@@ -137,7 +170,7 @@ def prune_facilities(
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown pruning strategy {strategy!r}")
     if grid is None:
-        grid = 128 if len(facilities) < 2000 else 256
+        grid = adaptive_grid(len(facilities))
     facilities = np.asarray(facilities, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
     M = len(facilities)
@@ -161,6 +194,7 @@ def prune_facilities(
     n_cover = 0
     radius = np.inf  # zone radius upper bound; tightened as occluders land
     processed = 0
+    max_processed = 0.0  # farthest facility any chunk examined
 
     # Facilities are processed in distance order in CHUNKS: the discard test
     # for a chunk is evaluated against the current kept set only, and every
@@ -186,6 +220,7 @@ def prune_facilities(
         pos += len(batch)
         processed_batch = processed
         processed += len(batch)
+        max_processed = max(max_processed, float(dist_q[batch[-1]]))
         n_b, c_b = bisector(facilities[batch], q)  # [B, 2], [B]
         full_test = strategy == "infzone" or processed_batch < warmup
         if full_test:
@@ -211,5 +246,8 @@ def prune_facilities(
             cov.counts += full_inv.sum(axis=0).astype(np.int32)
             radius = cov.zone_radius(k, q)
 
-    stats = PruneStats(M, int(keep.sum()), n_eq1, n_cover, strategy)
+    safe_radius = (
+        max(2.0 * float(radius), max_processed) if np.isfinite(radius) else np.inf
+    )
+    stats = PruneStats(M, int(keep.sum()), n_eq1, n_cover, strategy, safe_radius)
     return keep, stats

@@ -1,0 +1,36 @@
+"""Dynamic-data subsystem: versioned updates, scene refit, continuous RkNN.
+
+Public surface:
+
+* :class:`~repro.dynamic.engine.DynamicEngine` — a
+  :class:`~repro.core.engine.RkNNEngine` whose ``(facilities, users)``
+  snapshot evolves through :meth:`apply_updates`;
+* :class:`~repro.dynamic.updates.UpdateBatch` — one atomic delta;
+* :class:`~repro.dynamic.continuous.ContinuousQuery` — a standing query
+  handle streaming ``(version, RkNNResult)`` change events;
+* :class:`~repro.dynamic.policy.RefitPolicy` — the priced
+  refit-vs-rebuild frontier.
+
+See ``docs/API.md`` ("Dynamic data") for the lifecycle.
+"""
+
+from repro.dynamic.continuous import ContinuousQuery
+from repro.dynamic.engine import DynamicEngine, DynamicStats, UpdateReport
+from repro.dynamic.policy import RefitDecision, RefitPolicy
+from repro.dynamic.refit import refit_scene, remap_scene, scene_update_safe
+from repro.dynamic.updates import UpdateBatch, apply_to_points, changed_positions
+
+__all__ = [
+    "DynamicEngine",
+    "DynamicStats",
+    "UpdateReport",
+    "UpdateBatch",
+    "ContinuousQuery",
+    "RefitPolicy",
+    "RefitDecision",
+    "apply_to_points",
+    "changed_positions",
+    "refit_scene",
+    "remap_scene",
+    "scene_update_safe",
+]

@@ -1,0 +1,402 @@
+"""The versioned dynamic engine: incremental updates over ``RkNNEngine``.
+
+Every query path in the static engine assumes a frozen ``(facilities,
+users)`` snapshot; :class:`DynamicEngine` removes that assumption the way
+graphics pipelines do — by *refitting* acceleration state instead of
+rebuilding it:
+
+* :meth:`apply_updates` takes an :class:`~repro.dynamic.updates.UpdateBatch`
+  (facility insert/delete/move, user insert/delete/move), advances a
+  monotonically increasing ``version``, and reconciles every piece of
+  amortized engine state with the delta rather than dropping it all:
+
+  - **device user arrays** — pure user *moves* scatter into the resident
+    ``xs``/``ys`` (and the mesh-sharded copies) in place; only
+    inserts/deletes force a re-upload;
+  - **scene cache** — entries are migrated through the three-level
+    survive / refit / rebuild ladder of :mod:`repro.dynamic.refit`: a
+    scene whose pruning certificate the delta does not pierce is re-keyed
+    (row ids remapped) and survives with its memoized grid/BVH indexes; a
+    pierced scene whose kept set a re-prune confirms unchanged is patched
+    (occluder fans of moved facilities respliced, indexes refit via
+    ``Backend.refit_index``); everything else is dropped and rebuilt
+    lazily.  Eager-refit vs lazy-rebuild is a priced decision
+    (:class:`~repro.dynamic.policy.RefitPolicy`, fed by the planner's
+    cost profile and its own observed EMAs);
+  - **prepared-batch LRU / plan memos** — cleared (they alias user
+    arrays and scene lists wholesale; per-entry surgery is not worth it);
+  - **continuous queries** — each registered
+    :class:`~repro.dynamic.continuous.ContinuousQuery` runs its
+    influence-zone dirty test and patches or recounts only when the
+    delta could touch it.
+
+Equivalence contract (property-tested): after any sequence of
+``apply_updates``, every query path on this engine returns bit-identical
+results to a cold ``RkNNEngine`` built from ``(self.facilities,
+self.users)`` — for every registered backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.backends import get_backend
+from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.core.pruning import adaptive_grid
+from repro.dynamic.continuous import ContinuousQuery
+from repro.dynamic.policy import RefitPolicy
+from repro.dynamic.refit import refit_scene, remap_scene, scene_update_safe
+from repro.dynamic.updates import UpdateBatch, apply_to_points, changed_positions
+from repro.planner.models import WorkloadShape
+
+__all__ = ["DynamicEngine", "UpdateReport", "DynamicStats"]
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """What one :meth:`DynamicEngine.apply_updates` call did."""
+
+    version: int
+    t_update_s: float
+    rect_changed: bool
+    scenes_survived: int = 0
+    scenes_refit: int = 0
+    scenes_dropped: int = 0
+    indexes_refit: int = 0
+    indexes_rebuilt: int = 0
+    users_scattered: bool = False
+    continuous_patched: int = 0
+    continuous_skipped: int = 0
+    continuous_events: int = 0
+
+
+@dataclasses.dataclass
+class DynamicStats:
+    """Cumulative counters across the engine's update lifetime."""
+
+    n_updates: int = 0
+    t_update_s: float = 0.0
+    scenes_survived: int = 0
+    scenes_refit: int = 0
+    scenes_dropped: int = 0
+    indexes_refit: int = 0
+    indexes_rebuilt: int = 0
+    user_scatters: int = 0
+    user_reuploads: int = 0
+
+
+class DynamicEngine(RkNNEngine):
+    """A :class:`RkNNEngine` whose snapshot can change underneath it.
+
+    Construction matches the static engine; all query methods are
+    inherited unchanged and always serve the **latest** snapshot
+    (``self.version``).  See module docstring for the update semantics.
+
+    **Single-writer contract**: :meth:`apply_updates` must not run
+    concurrently with any query — including an active :meth:`stream`,
+    whose producer thread builds scenes in the background.  An update
+    racing a query would serve a mix of old and new snapshots with no
+    error.  Serialize updates against queries (drain streams first); a
+    reader-writer snapshot swap is a ROADMAP follow-on.
+    """
+
+    def __init__(self, facilities, users, config: RkNNConfig | None = None, **kw):
+        super().__init__(facilities, users, config, **kw)
+        self.version = 0
+        self.update_stats = DynamicStats()
+        self.refit_policy = RefitPolicy()
+        self._continuous: list[ContinuousQuery] = []
+        self._update_log: list[UpdateReport] = []
+
+    # ------------------------------------------------------------------
+    # continuous queries
+    # ------------------------------------------------------------------
+    def register_continuous(self, q, k: int) -> ContinuousQuery:
+        """Register a standing RkNN query (facility index or ``[2]``
+        point); it is re-evaluated on exactly the updates that can change
+        it and streams ``(version, RkNNResult)`` via ``poll()``."""
+        cq = ContinuousQuery(self.facilities, self.users, q, k, self.version)
+        self._continuous.append(cq)
+        return cq
+
+    def explain_updates(self) -> list[UpdateReport]:
+        """Per-update reports, oldest first (bounded to the last 128)."""
+        return list(self._update_log)
+
+    # ------------------------------------------------------------------
+    # observed rebuild costs feed the refit-vs-rebuild frontier
+    # ------------------------------------------------------------------
+    def _build_scene(self, q, k: int, rect, *, pad_to: int | None = None):
+        misses = self.scene_cache.misses if self.scene_cache is not None else None
+        t0 = time.perf_counter()
+        scene = super()._build_scene(q, k, rect, pad_to=pad_to)
+        if misses is not None and self.scene_cache.misses > misses:
+            self.refit_policy.observe("rebuild", time.perf_counter() - t0)
+        return scene
+
+    # ------------------------------------------------------------------
+    # the update path
+    # ------------------------------------------------------------------
+    def apply_updates(self, batch: UpdateBatch | None = None, **deltas) -> UpdateReport:
+        """Apply one atomic delta; returns the new-version report.
+
+        Accepts either a prebuilt :class:`UpdateBatch` or its fields as
+        keyword arguments (``apply_updates(user_move=(ids, pts))``).
+        """
+        if batch is None:
+            batch = UpdateBatch(**deltas)
+        elif deltas:
+            raise TypeError("pass either an UpdateBatch or keyword deltas, not both")
+        batch.validate(len(self.facilities), len(self.users))
+        t0 = time.perf_counter()
+
+        old_f, old_u = self.facilities, self.users
+        old_rect = None if self._explicit_rect else self.rect
+        old_fp = self._fingerprint()
+        old_grid = adaptive_grid(len(old_f))  # pruning resolution regime
+
+        new_f, map_f = apply_to_points(
+            old_f, batch.facility_insert, batch.facility_delete, batch.facility_move
+        )
+        new_u, map_u = apply_to_points(
+            old_u, batch.user_insert, batch.user_delete, batch.user_move
+        )
+        changed_pos = changed_positions(batch, old_f)
+
+        # ---- swap in the new snapshot ---------------------------------
+        self.facilities = new_f
+        self.users = new_u
+        self._hull = None
+        if not self._explicit_rect:
+            self._rect = None
+        rect_changed = (not self._explicit_rect) and self.rect != old_rect
+        if batch.touches_facilities:
+            self._fp = None
+        new_fp = self._fingerprint()
+
+        report = UpdateReport(
+            version=self.version + 1, t_update_s=0.0, rect_changed=rect_changed
+        )
+
+        # ---- device-resident user coordinates -------------------------
+        if batch.touches_users:
+            self._refit_user_arrays(batch, report)
+
+        # ---- prepared-batch LRU + plan memos: alias the old snapshot --
+        with self._batch_lock:
+            self._batch_cache.clear()
+        # the grid's mesh-sharded jitted step closes over the domain rect
+        if rect_changed:
+            for key in [k for k in self._mesh_steps if k[0] == "grid"]:
+                del self._mesh_steps[key]
+        # the mono sub-engine snapshots the facility set at construction
+        self._mono = None
+        self._is_mono = None
+
+        # ---- scene cache: survive / refit / rebuild -------------------
+        if self.scene_cache is not None:
+            self._migrate_scene_cache(
+                batch, old_fp, new_fp, old_rect, rect_changed,
+                old_grid, map_f, changed_pos, report,
+            )
+
+        # ---- continuous queries ---------------------------------------
+        self.version += 1
+        ctx = _UpdateContext(
+            batch=batch,
+            old_facilities=old_f,
+            new_facilities=new_f,
+            old_users=old_u,
+            new_users=new_u,
+            map_f=map_f,
+            map_u=map_u,
+            version=self.version,
+        )
+        # closed/dead handles are dropped here, not at close() time — the
+        # handle list is only ever touched on the update path (single-writer)
+        self._continuous = [cq for cq in self._continuous if cq.alive]
+        for cq in self._continuous:
+            before = (cq.n_patched, cq.n_skipped, cq.n_events)
+            cq._on_update(ctx)
+            report.continuous_patched += cq.n_patched - before[0]
+            report.continuous_skipped += cq.n_skipped - before[1]
+            report.continuous_events += cq.n_events - before[2]
+
+        report.t_update_s = time.perf_counter() - t0
+        self.update_stats.n_updates += 1
+        self.update_stats.t_update_s += report.t_update_s
+        self.update_stats.scenes_survived += report.scenes_survived
+        self.update_stats.scenes_refit += report.scenes_refit
+        self.update_stats.scenes_dropped += report.scenes_dropped
+        self.update_stats.indexes_refit += report.indexes_refit
+        self.update_stats.indexes_rebuilt += report.indexes_rebuilt
+        self._update_log.append(report)
+        if len(self._update_log) > 128:
+            del self._update_log[0]
+        return report
+
+    # ------------------------------------------------------------------
+    def _refit_user_arrays(self, batch: UpdateBatch, report: UpdateReport) -> None:
+        """Masked scatter into the resident device arrays for pure moves;
+        re-upload (lazily) on any shape change."""
+        mv_ids, mv_pts = batch.user_move
+        moves_only = (
+            len(mv_ids) > 0
+            and not len(batch.user_insert)
+            and not len(batch.user_delete)
+        )
+        if moves_only:
+            if self._xs is not None:
+                idx = jnp.asarray(mv_ids)
+                self._xs = self._xs.at[idx].set(jnp.asarray(mv_pts[:, 0], jnp.float32))
+                self._ys = self._ys.at[idx].set(jnp.asarray(mv_pts[:, 1], jnp.float32))
+                report.users_scattered = True
+                self.update_stats.user_scatters += 1
+        else:
+            self._xs = self._ys = None  # shape changed: lazy re-upload on next use
+            self.update_stats.user_reuploads += 1
+        if self.mesh is not None:
+            if moves_only:
+                idx = jnp.asarray(mv_ids)
+                self._mesh_xs = self._mesh_xs.at[idx].set(
+                    jnp.asarray(mv_pts[:, 0], jnp.float32)
+                )
+                self._mesh_ys = self._mesh_ys.at[idx].set(
+                    jnp.asarray(mv_pts[:, 1], jnp.float32)
+                )
+            else:
+                self._init_mesh(self.mesh)
+
+    # ------------------------------------------------------------------
+    def _migrate_scene_cache(
+        self,
+        batch: UpdateBatch,
+        old_fp: int,
+        new_fp: int,
+        old_rect,
+        rect_changed: bool,
+        old_grid: int,
+        map_f: np.ndarray,
+        changed_pos: np.ndarray,
+        report: UpdateReport,
+    ) -> None:
+        cache = self.scene_cache
+        if rect_changed:
+            # every cached scene was clipped against the old domain; a cold
+            # engine would build different geometry — purge wholesale
+            _, dropped = cache.migrate(lambda key: True, lambda key, s: None)
+            report.scenes_dropped += dropped
+            return
+        if not batch.touches_facilities:
+            # user-only delta with a stable hull: scenes depend on
+            # (facilities, q, k, rect) alone — every entry survives as-is
+            report.scenes_survived += len(cache)
+            return
+        # adaptive pruning-grid regime flip: a cold re-prune would run at a
+        # different resolution — nothing survives
+        if self.config.prune_grid is None and adaptive_grid(len(self.facilities)) != old_grid:
+            _, dropped = cache.migrate(lambda key: True, lambda key, s: None)
+            report.scenes_dropped += dropped
+            return
+
+        moved_ids_old = batch.facility_move[0]
+        moved_new = map_f[moved_ids_old] if len(moved_ids_old) else np.zeros(0, np.int64)
+        grid_param = self.config.prune_grid
+        # Refit is only attempted for pure-move deltas: an insert/delete
+        # that pierced a scene's certificate almost always changes its kept
+        # set, so the attempt's re-prune (the expensive part) is a near-
+        # certain write-off — measured to flip the churn regime from a win
+        # to a 0.6x loss when attempted indiscriminately.
+        moves_only = not len(batch.facility_insert) and not len(batch.facility_delete)
+
+        def migrate(key, scene):
+            _fp, q_key, k, rect = key
+            if rect != self.rect:
+                return None  # transient-rect entry (out-of-hull point query)
+            if isinstance(q_key, (int, np.integer)):
+                new_q = int(map_f[int(q_key)])
+                if new_q < 0 or (len(moved_ids_old) and np.any(moved_ids_old == q_key)):
+                    return None  # the query facility itself is gone / moved
+                q_build: int | np.ndarray = new_q
+                new_q_key: int | tuple = new_q
+            else:
+                q_build = np.asarray(q_key, np.float64)
+                new_q_key = q_key
+            if scene_update_safe(scene, changed_pos):
+                report.scenes_survived += 1
+                return (new_fp, new_q_key, k, rect), remap_scene(
+                    scene, map_f, len(self.facilities)
+                )
+            # pierced certificate: priced eager-refit vs lazy-rebuild
+            if not moves_only:
+                return None
+            n = scene.n_tris
+            owner_new = map_f[scene.owner[:n][scene.owner[:n] >= 0]]
+            n_changed = (
+                int(np.isin(owner_new, moved_new).sum()) if len(moved_new) else 0
+            )
+            shape = WorkloadShape(
+                len(self.facilities), len(self.users), k, 1, m_tris=max(n, 1)
+            )
+            decision = self.refit_policy.price(shape, n_changed, n)
+            if decision.action != "refit":
+                return None
+            t0 = time.perf_counter()
+            out = refit_scene(
+                scene,
+                map_f,
+                self.facilities,
+                q_build,
+                k,
+                rect,
+                moved_new,
+                strategy=self.config.strategy,
+                grid=grid_param,
+            )
+            if out is None:
+                # a bailed refit attempt is neither a refit nor a rebuild
+                # observation — feeding its (small) cost into either EMA
+                # would skew the frontier
+                return None
+            new_scene, changed_tris = out
+            store = getattr(scene, "_engine_indexes", None)
+            if store:
+                new_store = {}
+                for (bname, g), index in store.items():
+                    if index is None:  # index-less backend (dense paths)
+                        new_store[(bname, g)] = None
+                        continue
+                    idx, was_refit = get_backend(bname).refit_index(
+                        index, scene, new_scene, changed_tris, grid_g=g
+                    )
+                    new_store[(bname, g)] = idx
+                    if was_refit:
+                        report.indexes_refit += 1
+                    else:
+                        report.indexes_rebuilt += 1
+                object.__setattr__(new_scene, "_engine_indexes", new_store)
+            self.refit_policy.observe("refit", time.perf_counter() - t0)
+            report.scenes_refit += 1
+            return (new_fp, new_q_key, k, rect), new_scene
+
+        _, dropped = cache.migrate(lambda key: key[0] == old_fp, migrate)
+        report.scenes_dropped += dropped
+
+
+@dataclasses.dataclass
+class _UpdateContext:
+    """Everything a continuous query needs to reconcile one update."""
+
+    batch: UpdateBatch
+    old_facilities: np.ndarray
+    new_facilities: np.ndarray
+    old_users: np.ndarray
+    new_users: np.ndarray
+    map_f: np.ndarray
+    map_u: np.ndarray
+    version: int

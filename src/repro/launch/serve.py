@@ -51,12 +51,35 @@ class ServeStats:
     m_max: int = 0
 
 
+_deprecation_warned = False
+
+
+def _warn_deprecated_once() -> None:
+    """One ``DeprecationWarning`` per process — a serving loop constructs
+    servers in bulk and must not flood its logs."""
+    global _deprecation_warned
+    if _deprecation_warned:
+        return
+    _deprecation_warned = True
+    import warnings
+
+    warnings.warn(
+        "RkNNServer is deprecated: construct repro.core.engine.RkNNEngine "
+        "(or repro.dynamic.DynamicEngine for mutable snapshots) directly — "
+        "see docs/API.md for the migration table.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 class RkNNServer:
     """DEPRECATED: thin alias over :class:`RkNNEngine` (docs/API.md).
 
     Preserved surface: ``query_batch(q_indices, k) -> masks [Q, N]``,
     ``serve_stream(batches, k)`` (double-buffered generator), and
-    ``stats``.  All state and scheduling live in the engine.
+    ``stats``.  All state and scheduling live in the engine — including
+    the versioned dynamic entry points (``repro.dynamic``), which this
+    alias deliberately does not grow.
     """
 
     def __init__(
@@ -69,6 +92,7 @@ class RkNNServer:
         strategy: str = "infzone",
         scene_cache: int = 0,
     ):
+        _warn_deprecated_once()
         self.engine = RkNNEngine(
             facilities,
             users,

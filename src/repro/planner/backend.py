@@ -23,10 +23,25 @@ from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from repro.planner.models import WorkloadShape
-from repro.planner.profiles import PlannerProfile, active_or_builtin
+from repro.planner.profiles import (
+    PlannerProfile,
+    active_or_builtin,
+    get_active_profile,
+    note_recalibrated,
+    set_active_profile,
+)
 
 __all__ = ["PlannerBackend"]
+
+#: Online re-calibration constants: damped step size on the log-cost
+#: residual, per-observation residual clip, and the cumulative absolute
+#: drift past which memoized plans are re-priced (epoch bump).
+RECAL_LR = 0.2
+RECAL_CLIP = 2.0
+RECAL_EPOCH_DRIFT = 0.5
 
 
 class PlannerBackend:
@@ -53,6 +68,8 @@ class PlannerBackend:
     def __init__(self) -> None:
         self._last_plan: dict | None = None
         self._lock = threading.Lock()
+        self._recal_drift = 0.0
+        self.n_recal_nudges = 0
 
     # ------------------------------------------------------------------
     # pricing
@@ -120,6 +137,72 @@ class PlannerBackend:
             (cands[best_single], float(costs[best_single, i]))
             for i in range(len(shapes))
         ]
+
+    # ------------------------------------------------------------------
+    # online re-calibration
+    # ------------------------------------------------------------------
+    def _pred_obs_pairs(self, plan: dict):
+        """(backend, predicted_s, observed_s, verify_only) per dispatch
+        the plan actually ran — the live residual signal."""
+        mode = plan.get("mode", "")
+        if mode in ("single", "stream-batch"):
+            name, pred, obs = (
+                plan.get("backend"),
+                plan.get("predicted_s"),
+                plan.get("observed_s"),
+            )
+            if name is None or pred is None or obs is None:
+                return
+            yield name, pred, obs, bool(plan.get("cache_hit") or plan.get("amortized"))
+            return
+        if mode == "batch":
+            assigned = plan.get("assignments") or []
+            per_q = plan.get("predicted_per_query") or []
+            observed = plan.get("observed_group_s") or {}
+            for name, obs in observed.items():
+                pred = sum(c for a, c in zip(assigned, per_q) if a == name)
+                # batch groups are priced post-scene (filter cost sunk)
+                yield name, pred, obs, True
+
+    def observe(self, plan: dict) -> int:
+        """Damped online re-calibration from one closed-out plan.
+
+        Each dispatched backend's log-cost residual ``log(obs / pred)``
+        (clipped) nudges the **active** profile's constant coefficients —
+        verify only when the filter phase was amortized away, both phases
+        otherwise.  The built-in prior is never mutated in place: if no
+        profile is active, a private copy is activated first.  Cumulative
+        drift past ``RECAL_EPOCH_DRIFT`` bumps the profile epoch so
+        memoized batch plans are re-priced.  Returns the nudge count.
+        """
+        import copy
+
+        prof = get_active_profile()
+        if prof is None:
+            prof = copy.deepcopy(active_or_builtin())
+            prof.source = prof.source + "+online"
+            set_active_profile(prof)
+        n = 0
+        with self._lock:
+            for name, pred, obs, verify_only in self._pred_obs_pairs(plan):
+                model = prof.models.get(name)
+                if model is None:
+                    continue
+                r = float(
+                    np.clip(np.log(max(obs, 1e-7) / max(pred, 1e-7)),
+                            -RECAL_CLIP, RECAL_CLIP)
+                )
+                delta = RECAL_LR * r
+                model.verify.coef[0] += delta
+                if not verify_only:
+                    model.filter.coef[0] += delta
+                self._recal_drift += abs(delta)
+                n += 1
+                self.n_recal_nudges += 1
+            if self._recal_drift >= RECAL_EPOCH_DRIFT:
+                self._recal_drift = 0.0
+                note_recalibrated()
+        return n
 
     # ------------------------------------------------------------------
     # explain

@@ -38,6 +38,7 @@ from repro.planner.profiles import (
     PlannerProfile,
     default_profile_path,
     hardware_fingerprint,
+    runner_profile_path,
     set_active_profile,
 )
 from repro.workloads import Scenario, Workload, calibration_grid
@@ -174,6 +175,11 @@ def main(argv: list[str] | None = None) -> int:
         "--activate", action="store_true",
         help="install as the process-wide active profile after saving",
     )
+    ap.add_argument(
+        "--runner-store", default=None, metavar="DIR",
+        help="also write the profile to DIR/<runner-class>.json (the "
+        "committed per-runner-class store, e.g. benchmarks/profiles)",
+    )
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -185,6 +191,9 @@ def main(argv: list[str] | None = None) -> int:
         verbose=args.verbose,
     )
     path = prof.save(args.out or default_profile_path())
+    if args.runner_store:
+        rpath = prof.save(runner_profile_path(args.runner_store))
+        print(f"runner-class profile -> {rpath}", file=sys.stderr)
     if args.activate:
         set_active_profile(prof)
     print(

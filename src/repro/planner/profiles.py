@@ -34,8 +34,12 @@ __all__ = [
     "get_active_profile",
     "set_active_profile",
     "profile_epoch",
+    "note_recalibrated",
     "load_profile",
     "default_profile_path",
+    "runner_class",
+    "runner_profile_path",
+    "load_runner_profile",
 ]
 
 PROFILE_VERSION = 1
@@ -199,6 +203,55 @@ def profile_epoch() -> int:
     decisions key on it so recalibration invalidates them."""
     with _active_lock:
         return _epoch
+
+
+def note_recalibrated() -> None:
+    """Bump the epoch without swapping the profile object — the online
+    re-calibration path mutates the active profile's coefficients in
+    place and calls this once the cumulative drift is large enough that
+    memoized plans should be re-priced."""
+    global _epoch
+    with _active_lock:
+        _epoch += 1
+
+
+# --------------------------------------------------------------------------
+# per-runner-class committed profiles (benchmarks/profiles/<class>.json)
+# --------------------------------------------------------------------------
+
+
+def runner_class(hw: dict | None = None) -> str:
+    """A filesystem-safe identity for "machines like this one" — the key
+    under which CI runner classes commit calibrated profiles."""
+    hw = hw or hardware_fingerprint()
+    raw = "-".join(
+        str(hw.get(k, "unknown"))
+        for k in ("system", "machine", "platform", "device_kind")
+    ).lower()
+    return "".join(c if c.isalnum() or c in "-_." else "_" for c in raw)
+
+
+def runner_profile_path(root: str) -> str:
+    return os.path.join(root, runner_class() + ".json")
+
+
+def load_runner_profile(root: str) -> PlannerProfile | None:
+    """Load this runner class's committed profile, or ``None`` when the
+    file is missing, unreadable, schema-stale, or was calibrated on a
+    different hardware class (strict match — unlike :func:`load_profile`,
+    which warns and proceeds, a *committed* profile must never silently
+    misprice a different machine)."""
+    path = runner_profile_path(root)
+    try:
+        with open(path) as f:
+            prof = PlannerProfile.from_json(json.load(f))
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return None
+    here = hardware_fingerprint()
+    for key in ("system", "machine", "platform", "device_kind"):
+        if prof.hardware.get(key) != here.get(key):
+            return None
+    return prof
 
 
 # --------------------------------------------------------------------------

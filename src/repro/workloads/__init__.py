@@ -8,6 +8,11 @@ from repro.workloads.scenarios import (
     get_scenario,
     scenario_names,
 )
+from repro.workloads.updates import (
+    drifting_users,
+    facility_churn,
+    facility_jitter,
+)
 
 __all__ = [
     "Scenario",
@@ -16,4 +21,7 @@ __all__ = [
     "get_scenario",
     "scenario_names",
     "calibration_grid",
+    "drifting_users",
+    "facility_churn",
+    "facility_jitter",
 ]

@@ -1,0 +1,449 @@
+"""The dynamic-data subsystem (ISSUE 4).
+
+Covers the update-PR acceptance surface:
+
+* **cold-rebuild equivalence** (property-style): any seeded sequence of
+  facility/user inserts/deletes/moves followed by ``query``/``query_batch``
+  is bit-identical — masks AND counts — to a cold engine built from the
+  final snapshot, across every registered concrete backend;
+* the survive / refit / rebuild cache ladder actually fires (user-only
+  deltas keep scenes; far facility churn keeps scenes via the pruning
+  certificate; near jitter refits; everything stays correct);
+* index refit units: ``refit_grid`` / ``refit_bvh`` count exactly like
+  fresh builds, and the BVH quality gate rebuilds on large drift;
+* continuous queries: exact masks under churn, influence-zone skips,
+  change-only event streaming, handle death on query deletion;
+* online planner re-calibration flips a mispriced backend choice;
+* per-runner-class profile store round-trips and rejects foreign hardware;
+* the ``RkNNServer`` deprecation warning fires exactly once per process.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.backends import concrete_backends, get_backend
+from repro.core.brute import rank_counts_np
+from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.core.geometry import Rect
+from repro.core.grid import build_grid, grid_hit_counts_jnp, refit_grid
+from repro.core.bvh import build_bvh, bvh_hit_counts, refit_bvh
+from repro.core.scene import build_scene
+from repro.dynamic import DynamicEngine, UpdateBatch, apply_to_points
+from repro.workloads import drifting_users, facility_churn, facility_jitter
+
+
+def _instance(seed, M=50, N=300, pin_hull=True):
+    rng = np.random.default_rng(seed)
+    F, U = rng.random((M, 2)), rng.random((N, 2))
+    if pin_hull:  # corner facilities: interior churn never moves the rect
+        F[:4] = [[0.0, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0]]
+    return F, U, rng
+
+
+def _random_batch(rng, F, U, *, protect=()):
+    """One random mixed delta against the current snapshot."""
+    protected = np.asarray(sorted(protect), np.int64)
+    f_cand = np.setdiff1d(np.arange(4, len(F)), protected)
+    n_fm = int(rng.integers(0, 3))
+    n_fd = int(rng.integers(0, 2))
+    picks = rng.choice(f_cand, size=min(n_fm + n_fd, len(f_cand)), replace=False)
+    fm, fd = picks[:n_fm], picks[n_fm:]
+    n_um = int(rng.integers(0, 20))
+    um = rng.choice(len(U), size=n_um, replace=False)
+    n_ud = int(rng.integers(0, 3))
+    ud = np.setdiff1d(rng.choice(len(U), size=n_ud, replace=False), um)
+    return UpdateBatch(
+        facility_move=(fm, np.clip(F[fm] + rng.normal(0, 0.05, (len(fm), 2)), 0, 1)),
+        facility_delete=fd,
+        facility_insert=rng.random((int(rng.integers(0, 2)), 2)),
+        user_move=(um, np.clip(U[um] + rng.normal(0, 0.02, (len(um), 2)), 0, 1)),
+        user_delete=ud,
+        user_insert=rng.random((int(rng.integers(0, 3)), 2)),
+    )
+
+
+def _apply_shadow(F, U, batch):
+    F, _ = apply_to_points(
+        F, batch.facility_insert, batch.facility_delete, batch.facility_move
+    )
+    U, _ = apply_to_points(U, batch.user_insert, batch.user_delete, batch.user_move)
+    return F, U
+
+
+# ---------------------------------------------------- cold-rebuild equivalence
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_update_sequence_matches_cold_engine_all_backends(seed):
+    """Property: after any update sequence, every backend's dynamic-path
+    masks AND counts equal a cold engine built from the final snapshot."""
+    F, U, rng = _instance(seed, M=40, N=200)
+    qs = [5, 9, np.array([0.4, 0.6])]
+    k = 4
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    dyn.query_batch([5, 9], k)  # populate caches so migration has work
+    for _ in range(4):
+        batch = _random_batch(rng, dyn.facilities, dyn.users, protect=(5, 9))
+        F, U = _apply_shadow(dyn.facilities, dyn.users, batch)
+        dyn.apply_updates(batch)
+        np.testing.assert_array_equal(dyn.facilities, F)
+        np.testing.assert_array_equal(dyn.users, U)
+        # interleave queries so later migrations see warm caches
+        dyn.query_batch([5, 9], k)
+    for backend in concrete_backends():
+        cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend=backend))
+        bd = dyn.query_batch(qs, k, backend=backend)
+        bc = cold.query_batch(qs, k)
+        np.testing.assert_array_equal(bd.masks, bc.masks, err_msg=backend)
+        np.testing.assert_array_equal(bd.counts, bc.counts, err_msg=backend)
+        for q in qs:
+            sd = dyn.query(q, k, backend=backend)
+            sc = cold.query(q, k)
+            np.testing.assert_array_equal(sd.mask, sc.mask, err_msg=backend)
+            np.testing.assert_array_equal(sd.counts, sc.counts, err_msg=backend)
+
+
+def test_generated_streams_match_cold_engine():
+    """The shipped stream generators (drift / churn / jitter) stay exact."""
+    F, U, _ = _instance(7, M=60, N=250)
+    qs = [6, 10]
+    k = 5
+    streams = (
+        drifting_users(U, steps=2, frac=0.1, seed=1)
+        + facility_jitter(F, steps=2, frac=0.05, seed=2, protect=np.asarray(qs))
+        + facility_churn(F, steps=1, rate=0.03, seed=3, protect=np.asarray(qs))
+    )
+    # note: churn ids reference the snapshot the generator saw; replay the
+    # same order the generator assumed (drift first mutates users only)
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="grid"))
+    dyn.query_batch(qs, k)
+    for batch in streams:
+        dyn.apply_updates(batch)
+        cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="grid"))
+        np.testing.assert_array_equal(
+            dyn.query_batch(qs, k).masks, cold.query_batch(qs, k).masks
+        )
+
+
+def test_update_validation_errors():
+    F, U, _ = _instance(0)
+    dyn = DynamicEngine(F, U)
+    with pytest.raises(IndexError):
+        dyn.apply_updates(UpdateBatch(facility_delete=[len(F)]))
+    with pytest.raises(ValueError):
+        dyn.apply_updates(
+            UpdateBatch(user_delete=[1], user_move=([1], [[0.5, 0.5]]))
+        )
+    with pytest.raises(ValueError):
+        UpdateBatch(facility_move=([1, 2], [[0.1, 0.2]]))
+    rep = dyn.apply_updates(UpdateBatch())
+    assert rep.version == 1 and dyn.version == 1  # empty delta still versions
+
+
+# ------------------------------------------------------- the cache ladder
+def test_user_only_updates_keep_scenes_and_scatter():
+    F, U, rng = _instance(11)
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    qs = [5, 9, 13]
+    dyn.query_batch(qs, 4)
+    dyn.xs  # materialize the device arrays so the scatter path runs
+    ids = rng.choice(len(U), 25, replace=False)
+    pts = np.clip(U[ids] + rng.normal(0, 0.01, (25, 2)), 0.01, 0.99)
+    rep = dyn.apply_updates(UpdateBatch(user_move=(ids, pts)))
+    assert not rep.rect_changed
+    assert rep.scenes_survived == 3 and rep.scenes_dropped == 0
+    assert rep.users_scattered
+    h0 = dyn.scene_cache.hits
+    r = dyn.query_batch(qs, 4)
+    assert dyn.scene_cache.hits == h0 + 3  # survivors actually hit
+    cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
+    np.testing.assert_array_equal(r.masks, cold.query_batch(qs, 4).masks)
+
+
+def test_far_facility_change_survives_certificate():
+    """A facility inserted far outside every query's pruning certificate
+    leaves all cached scenes alive (and still bit-correct)."""
+    F, U, _ = _instance(13)
+    # queries clustered near the origin corner, insertion at the far corner
+    F[5:8] = [[0.1, 0.1], [0.12, 0.08], [0.09, 0.13]]
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    qs = [5, 6, 7]
+    dyn.query_batch(qs, 2)
+    rep = dyn.apply_updates(UpdateBatch(facility_insert=[[0.999, 0.999]]))
+    assert rep.scenes_survived == 3, rep
+    cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
+    np.testing.assert_array_equal(
+        dyn.query_batch(qs, 2).counts, cold.query_batch(qs, 2).counts
+    )
+
+
+def test_near_jitter_refits_scene_and_indexes():
+    F, U, rng = _instance(17, M=80, N=400)
+    for backend in ("grid", "bvh"):
+        dyn = DynamicEngine(F, U, RkNNConfig(backend=backend))
+        dyn.query(5, 6)
+        scene = dyn._build_scene(5, 6, dyn.rect)
+        kept = np.flatnonzero(scene.keep)
+        kept = kept[kept >= 4][:2]  # never jitter the hull-pinning corners
+        jit = dyn.facilities[kept] + 1e-4
+        rep = dyn.apply_updates(UpdateBatch(facility_move=(kept, jit)))
+        assert rep.scenes_refit >= 1, (backend, rep)
+        assert rep.indexes_refit >= 1, (backend, rep)
+        cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend=backend))
+        rd, rc = dyn.query(5, 6), cold.query(5, 6)
+        np.testing.assert_array_equal(rd.counts, rc.counts)
+        np.testing.assert_array_equal(rd.mask, rc.mask)
+
+
+def test_deleted_query_facility_drops_its_scenes_and_remaps_others():
+    F, U, _ = _instance(19)
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    dyn.query(10, 3)
+    dyn.query(20, 3)
+    rep = dyn.apply_updates(UpdateBatch(facility_delete=[10]))
+    assert rep.scenes_dropped >= 1
+    # old row 20 is row 19 now; equivalence against a cold engine
+    cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
+    np.testing.assert_array_equal(
+        dyn.query(19, 3).counts, cold.query(19, 3).counts
+    )
+
+
+# ---------------------------------------------------------- index refit units
+def test_refit_grid_counts_match_fresh_build():
+    F, U, rng = _instance(23, M=60, N=300)
+    rect = Rect.from_points(F, U)
+    sc = build_scene(F, 5, 8, rect)
+    n = sc.n_tris
+    g = build_grid(sc.tris[:n], sc.coeffs[:n], rect, G=32)
+    # jitter a kept facility, rebuild its occluder rows through refit_scene
+    F2 = F.copy()
+    kept = np.flatnonzero(sc.keep)[0]
+    F2[kept] += 1e-4
+    sc2 = build_scene(F2, 5, 8, rect)
+    assert sc2.n_tris == n
+    changed = np.flatnonzero(
+        (sc.coeffs[:n] != sc2.coeffs[:n]).reshape(n, -1).any(axis=1)
+    )
+    g2 = refit_grid(g, sc.tris[:n], sc.coeffs[:n], sc2.tris[:n], sc2.coeffs[:n], changed)
+    assert g2 is not None and g2 is not g
+    fresh = build_grid(sc2.tris[:n], sc2.coeffs[:n], rect, G=32)
+    xs = U[:, 0].astype(np.float32)
+    ys = U[:, 1].astype(np.float32)
+    a = np.asarray(grid_hit_counts_jnp(xs, ys, g2.base, g2.lists, g2.coeffs, rect, 32))
+    b = np.asarray(
+        grid_hit_counts_jnp(xs, ys, fresh.base, fresh.lists, fresh.coeffs, rect, 32)
+    )
+    np.testing.assert_array_equal(a, b)
+
+
+def test_refit_bvh_counts_match_and_quality_gate_trips():
+    F, U, _ = _instance(29, M=60, N=300)
+    rect = Rect.from_points(F, U)
+    sc = build_scene(F, 5, 8, rect)
+    n = sc.n_tris
+    bvh = build_bvh(sc.tris[:n])
+    jitter = sc.tris[:n] + 1e-5
+    refit = refit_bvh(bvh, jitter)
+    assert refit is not None
+    coeffs = sc.coeffs[:n]
+    xs = U[:, 0].astype(np.float32)
+    ys = U[:, 1].astype(np.float32)
+    fresh = build_bvh(jitter)
+    a = np.asarray(
+        bvh_hit_counts(xs, ys, refit.left, refit.right, refit.bbox, coeffs, k=8)
+    )
+    b = np.asarray(
+        bvh_hit_counts(xs, ys, fresh.left, fresh.right, fresh.bbox, coeffs, k=8)
+    )
+    np.testing.assert_array_equal(a, b)
+    # scatter the triangles far apart: box areas explode, the gate must trip
+    shift = np.random.default_rng(0).uniform(-100, 100, (n, 1, 2))
+    assert refit_bvh(bvh, sc.tris[:n] + shift) is None
+    assert refit_bvh(bvh, jitter[:-1]) is None  # count mismatch
+
+
+# ------------------------------------------------------------- continuous
+def test_continuous_query_exact_under_churn():
+    F, U, rng = _instance(31, M=50, N=250)
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    cq = dyn.register_continuous(8, 4)
+    np.testing.assert_array_equal(cq.mask, rank_counts_np(U, F, F[8], exclude=8) < 4)
+    versions = []
+    for _ in range(5):
+        batch = _random_batch(rng, dyn.facilities, dyn.users, protect=(8,))
+        dyn.apply_updates(batch)
+        truth = rank_counts_np(
+            dyn.users, dyn.facilities, dyn.facilities[cq.q_idx], exclude=cq.q_idx
+        )
+        np.testing.assert_array_equal(cq.counts, truth)  # bitwise-exact patching
+        np.testing.assert_array_equal(cq.mask, truth < 4)
+        versions.extend(v for v, _ in cq.poll())
+    assert cq.alive and cq.version == dyn.version
+    assert versions == sorted(versions)
+
+
+def test_continuous_query_skips_far_updates_and_emits_on_change_only():
+    F, U, _ = _instance(37)
+    F[5] = [0.1, 0.1]
+    U_local = np.clip(
+        np.random.default_rng(1).normal(0.1, 0.03, (100, 2)), 0.0, 0.3
+    )
+    dyn = DynamicEngine(F, U_local, RkNNConfig(backend="dense-ref"))
+    k = 1  # any adjacent facility steals q's nearest users
+    cq = dyn.register_continuous(5, k)
+    # far corner insert: provably outside the influence zone -> no event
+    dyn.apply_updates(UpdateBatch(facility_insert=[[0.99, 0.99]]))
+    assert cq.n_skipped == 1 and not cq.poll()
+    # a facility dropped onto the query's doorstep must emit
+    dyn.apply_updates(UpdateBatch(facility_insert=[[0.1, 0.11]]))
+    events = cq.poll()
+    assert len(events) == 1
+    version, res = events[0]
+    assert version == dyn.version and res.backend == "continuous"
+    truth = rank_counts_np(dyn.users, dyn.facilities, dyn.facilities[5], exclude=5)
+    np.testing.assert_array_equal(res.mask, truth < k)
+
+
+def test_continuous_query_dies_with_its_facility():
+    F, U, _ = _instance(41)
+    dyn = DynamicEngine(F, U)
+    cq = dyn.register_continuous(7, 3)
+    dyn.apply_updates(UpdateBatch(facility_delete=[7]))
+    assert not cq.alive
+    dyn.apply_updates(UpdateBatch(user_insert=[[0.5, 0.5]]))  # no crash
+    assert cq not in dyn._continuous  # dead handles are dropped
+
+
+def test_continuous_query_close_and_event_accounting():
+    F, U, _ = _instance(42)
+    dyn = DynamicEngine(F, U)
+    cq = dyn.register_continuous(6, 2)
+    rep = dyn.apply_updates(UpdateBatch(facility_insert=[F[6] + 1e-3]))
+    assert rep.continuous_events == cq.n_events  # counter, not buffer length
+    cq.close()
+    assert not cq.alive and not cq.poll()
+    n = cq.n_events
+    dyn.apply_updates(UpdateBatch(facility_insert=[F[6] + 2e-3]))
+    assert cq not in dyn._continuous and cq.n_events == n  # no longer maintained
+
+
+def test_continuous_point_query_and_moved_query_facility():
+    F, U, rng = _instance(43)
+    dyn = DynamicEngine(F, U)
+    cp = dyn.register_continuous(np.array([0.3, 0.3]), 4)
+    cf = dyn.register_continuous(6, 4)
+    dyn.apply_updates(UpdateBatch(facility_move=([6], [[0.7, 0.2]])))
+    assert cf.n_full == 1  # its own facility moved: full recount
+    t_pt = rank_counts_np(dyn.users, dyn.facilities, np.array([0.3, 0.3]))
+    t_f = rank_counts_np(dyn.users, dyn.facilities, dyn.facilities[6], exclude=6)
+    np.testing.assert_array_equal(cp.counts, t_pt)
+    np.testing.assert_array_equal(cf.counts, t_f)
+
+
+# ------------------------------------------------- online re-calibration
+def test_online_recalibration_shifts_backend_choice():
+    from repro.planner.models import (
+        FEATURE_NAMES,
+        BackendCostModel,
+        CostModel,
+    )
+    from repro.planner.profiles import (
+        PlannerProfile,
+        get_active_profile,
+        set_active_profile,
+    )
+
+    def const_model(name, filter_s, verify_s):
+        f = np.zeros(len(FEATURE_NAMES))
+        v = np.zeros(len(FEATURE_NAMES))
+        f[0], v[0] = np.log(filter_s), np.log(verify_s)
+        return BackendCostModel(name, CostModel(f), CostModel(v))
+
+    F, U, _ = _instance(47)
+    prev = get_active_profile()
+    set_active_profile(
+        PlannerProfile(
+            models={
+                "brute": const_model("brute", 1e-9, 1e-9),  # absurdly cheap
+                "dense-ref": const_model("dense-ref", 1e-3, 2e-3),
+            }
+        )
+    )
+    try:
+        eng = RkNNEngine(
+            F, U, RkNNConfig(backend="auto", online_recalibration=True)
+        )
+        chosen = [eng.query(3, 5).backend for _ in range(80)]
+        assert chosen[0] == "brute"  # the misprice wins at first...
+        assert "dense-ref" in chosen  # ...until residuals correct it
+        assert eng.stats.planner_recal_nudges > 0
+        # off by default: a fresh engine with the flag unset never nudges
+        eng2 = RkNNEngine(F, U, RkNNConfig(backend="auto"))
+        eng2.query(3, 5)
+        assert eng2.stats.planner_recal_nudges == 0
+    finally:
+        set_active_profile(prev)
+
+
+# ------------------------------------------------- runner-class profiles
+def test_runner_profile_store_roundtrip(tmp_path):
+    from repro.planner import profiles as P
+
+    prof = P.builtin_profile()
+    import copy
+
+    mine = copy.deepcopy(prof)
+    mine.hardware = P.hardware_fingerprint()
+    path = mine.save(P.runner_profile_path(str(tmp_path)))
+    assert path.endswith(P.runner_class() + ".json")
+    loaded = P.load_runner_profile(str(tmp_path))
+    assert loaded is not None and set(loaded.models) == set(mine.models)
+    # foreign hardware is rejected outright (strict, unlike load_profile)
+    mine.hardware = dict(mine.hardware, device_kind="TPU v99")
+    mine.save(P.runner_profile_path(str(tmp_path)))
+    assert P.load_runner_profile(str(tmp_path)) is None
+    assert P.load_runner_profile(str(tmp_path / "missing")) is None
+
+
+# ------------------------------------------------------ deprecation (once)
+def test_rknn_server_deprecation_warns_exactly_once():
+    from repro.launch import serve
+
+    F, U, _ = _instance(53)
+    old = serve._deprecation_warned
+    serve._deprecation_warned = False
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            serve.RkNNServer(F, U)
+            serve.RkNNServer(F, U)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "RkNNEngine" in str(dep[0].message)
+    finally:
+        serve._deprecation_warned = old
+
+
+# ----------------------------------------------------------- mesh scatter
+def test_dynamic_engine_with_mesh_scatters_and_stays_exact():
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices(1, model_axis=1)
+    F, U, rng = _instance(59, M=40, N=256)
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"), mesh=mesh)
+    qs = [5, 9, 13, 17]
+    dyn.query_batch(qs, 4)
+    ids = rng.choice(len(U), 16, replace=False)
+    pts = np.clip(U[ids] + rng.normal(0, 0.01, (16, 2)), 0.01, 0.99)
+    dyn.apply_updates(UpdateBatch(user_move=(ids, pts)))
+    cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
+    np.testing.assert_array_equal(
+        dyn.query_batch(qs, 4).masks, cold.query_batch(qs, 4).masks
+    )
+    # shape-changing delta forces the mesh re-init path
+    dyn.apply_updates(UpdateBatch(user_insert=[[0.5, 0.5], [0.6, 0.6]]))
+    cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
+    np.testing.assert_array_equal(
+        dyn.query_batch(qs, 4).masks, cold.query_batch(qs, 4).masks
+    )
