@@ -392,17 +392,19 @@ def scenario_sweep(
     ``explain()`` decisions; masks are asserted identical across all
     backends.
 
-    The fixed set covers every timeable deployment backend; interpret-
-    mode ``dense`` is excluded per the suite's timing convention (see
-    ``benchmarks/common.py``: it is a correctness tool, ``dense-ref`` is
-    the timed RT execution on CPU).  The planner still prices all five —
-    when calibration measures ``dense`` as genuinely fastest on this
-    runtime, ``auto`` exploiting it is the planner working as intended.
+    The fixed set is :func:`repro.core.backends.timeable_backends` — every
+    deployment backend whose wall time means something on this runtime.
+    Interpret-mode kernels (``dense``, ``grid-pallas`` on CPU — flagged
+    ``interpret_mode_on_cpu``) are correctness tools here; their timed
+    executions are ``dense-ref`` and ``grid-pallas-ref``.  The
+    ``grid`` vs ``grid-pallas-ref`` columns are the ISSUE 5 comparison:
+    the gather-bound ``[Q, N, L, 3, 3]`` jnp batch against the
+    cell-bucketed batch (one shared user sort + per-cell plane staging).
     """
     import collections
     import os
 
-    from repro.core.backends import get_backend
+    from repro.core.backends import get_backend, timeable_backends
     from repro.planner.calibrate import calibrate
     from repro.planner.profiles import (
         get_active_profile,
@@ -412,7 +414,7 @@ def scenario_sweep(
     )
     from repro.workloads import SCENARIOS
 
-    fixed = ("dense-ref", "grid", "bvh", "brute")
+    fixed = tuple(n for n in timeable_backends() if n != backend)
     prev = get_active_profile()
     t0 = time.perf_counter()
     # a committed runner-class profile (benchmarks/profiles/<class>.json)

@@ -6,7 +6,9 @@ like data (DESIGN.md §6).  ``scale`` multiplies the paper's cardinalities
 reproduces the published sizes).  The RT-RkNN method is timed with the
 ``dense-ref`` backend — the vectorized jnp execution of the ray-cast stage,
 which is what the Pallas kernel computes on the TPU target (interpret-mode
-Pallas is a correctness tool, not a timing tool).
+Pallas is a correctness tool, not a timing tool; the registry encodes this
+as ``Backend.interpret_mode_on_cpu``, and sweeps draw their contender sets
+from ``repro.core.backends.timeable_backends``).
 """
 
 from __future__ import annotations

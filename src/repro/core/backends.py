@@ -23,6 +23,12 @@ Built-in backends (all produce identical verdict sets — property-tested):
                    TPU-native execution of the paper's ray-casting stage.
 * ``"dense-ref"``— pure-jnp oracle (fast on CPU; same math).
 * ``"grid"``     — uniform-grid culled counting (TPU BVH analogue).
+* ``"grid-pallas"`` — cell-bucketed grid counting via the scalar-prefetch
+                   Pallas kernel (``repro.kernels.grid_raycast``): users
+                   sorted by cell once per batch, per-cell coefficient
+                   planes staged into VMEM per program instance.
+* ``"grid-pallas-ref"`` — pure-jnp execution of the same bucketed math
+                   (the fast CPU path, mirroring dense/dense-ref).
 * ``"bvh"``      — paper-faithful LBVH traversal with early termination.
 * ``"brute"``    — exact distance-rank counting (no geometry; baseline).
 * ``"auto"``     — the query planner (:mod:`repro.planner.backend`): a
@@ -33,7 +39,10 @@ Built-in backends (all produce identical verdict sets — property-tested):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
+import weakref
 from typing import Any, Callable, ClassVar
 
 import numpy as np
@@ -55,8 +64,14 @@ from repro.core.grid import (
     refit_grid,
     stack_grids,
 )
-from repro.core.scene import Scene, pad_scene_arrays
+from repro.core.scene import Scene, _next_pad, pad_scene_arrays
 from repro.kernels import ops as _ops
+from repro.kernels.grid_raycast import (
+    pack_cell_coeff_planes,
+    prepare_cell_buckets,
+    repack_cell_coeff_planes,
+    unsort_cell_counts,
+)
 
 __all__ = [
     "Backend",
@@ -66,9 +81,12 @@ __all__ = [
     "get_backend",
     "available_backends",
     "concrete_backends",
+    "timeable_backends",
     "DenseBackend",
     "DenseRefBackend",
     "GridBackend",
+    "GridPallasBackend",
+    "GridPallasRefBackend",
     "BvhBackend",
     "BruteBackend",
     "PlannerBackend",
@@ -133,6 +151,13 @@ class Backend:
     #: (the engine resolves them before filtering; they are excluded from
     #: the concrete-backend lists like ``repro.core.rknn.BACKENDS``).
     is_meta: ClassVar[bool] = False
+    #: True for Pallas-kernel backends whose CPU execution is interpret
+    #: mode — a bit-faithful correctness tool, orders of magnitude off the
+    #: compiled cost.  Timed harnesses (planner calibration, the scenario
+    #: sweep) consult :func:`timeable_backends` and skip them while
+    #: ``pallas_interpret_default()`` is on; on a real TPU they are
+    #: measured like any other backend.  Correctness suites ignore this.
+    interpret_mode_on_cpu: ClassVar[bool] = False
 
     # ---- filter phase (host) --------------------------------------------
     def build_index(self, scene: Scene, *, grid_g: int = 64):
@@ -210,6 +235,21 @@ def concrete_backends() -> tuple[str, ...]:
     return tuple(n for n, b in _REGISTRY.items() if not b.is_meta)
 
 
+def timeable_backends() -> tuple[str, ...]:
+    """Concrete backends whose wall time is meaningful on this runtime.
+
+    Excludes backends flagged ``interpret_mode_on_cpu`` while the Pallas
+    kernels would run in interpret mode (see :class:`Backend`) — the
+    single source of truth the calibration harness and benchmark sweeps
+    share, replacing per-name exclusion lists."""
+    interp = _ops.pallas_interpret_default()
+    return tuple(
+        n
+        for n, b in _REGISTRY.items()
+        if not b.is_meta and not (interp and b.interpret_mode_on_cpu)
+    )
+
+
 # --------------------------------------------------------------------------
 # Dense (stacked edge functions, no index)
 # --------------------------------------------------------------------------
@@ -221,6 +261,7 @@ class DenseBackend(Backend):
 
     name = "dense"
     kernel_backend = "pallas"
+    interpret_mode_on_cpu = True
 
     def count(self, req: QueryRequest) -> np.ndarray:
         return np.asarray(
@@ -231,7 +272,15 @@ class DenseBackend(Backend):
 
     def prepare_batch(self, req: BatchRequest) -> np.ndarray:
         scenes = req.scenes
-        mp = req.mp if req.mp is not None else max(s.tris.shape[0] for s in scenes)
+        # size the stacked pad from the REAL triangle counts: scenes arrive
+        # pre-padded (possibly to a much larger sticky bucket), and sizing
+        # from tris.shape[0] over-pads the whole [Q, Mp, 3, 3] stack on the
+        # one-shot shim path (req.mp None)
+        mp = (
+            req.mp
+            if req.mp is not None
+            else _next_pad(max(s.n_tris for s in scenes))
+        )
         return np.stack(
             [
                 pad_scene_arrays(
@@ -257,6 +306,7 @@ class DenseRefBackend(DenseBackend):
 
     name = "dense-ref"
     kernel_backend = "ref"
+    interpret_mode_on_cpu = False
 
 
 # --------------------------------------------------------------------------
@@ -269,12 +319,25 @@ class GridBackend(Backend):
     name = "grid"
 
     def build_index(self, scene: Scene, *, grid_g: int = 64):
-        return build_grid(
-            scene.tris[: scene.n_tris],
-            scene.coeffs[: scene.n_tris],
-            scene.rect,
-            G=grid_g,
-        )
+        # the built grid is memoized on the scene: the grid, grid-pallas,
+        # and grid-pallas-ref backends all build the identical index, so a
+        # scene queried through more than one of them pays one build (the
+        # pallas variants hang their packed planes off the shared object,
+        # keyed by lane pad)
+        store = getattr(scene, "_grid_index_memo", None)
+        if store is None:
+            store = {}
+            object.__setattr__(scene, "_grid_index_memo", store)
+        g = store.get(grid_g)
+        if g is None:
+            g = build_grid(
+                scene.tris[: scene.n_tris],
+                scene.coeffs[: scene.n_tris],
+                scene.rect,
+                G=grid_g,
+            )
+            store[grid_g] = g
+        return g
 
     def refit_index(
         self,
@@ -324,6 +387,205 @@ class GridBackend(Backend):
                 req.xs, req.ys, base, lists, coeffs, req.rect, req.grid_g
             )
         )
+
+
+# --------------------------------------------------------------------------
+# Grid-Pallas (cell-bucketed scalar-prefetch kernel over the grid index)
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class GridPallasBackend(GridBackend):
+    """Cell-bucketed grid counting via the scalar-prefetch Pallas kernel.
+
+    The jnp grid batch (:func:`repro.core.grid.grid_hit_counts_batch_jnp`)
+    pays a gather-bound ``[Q, N, L, 3, 3]`` temporary — per user, per
+    query, nine coefficient gathers per list slot.  This backend instead
+
+    * sorts users by grid cell once per ``(users, rect, G)`` (all stacked
+      scenes share one domain rect; the bucketing is LRU-cached on the
+      backend so successive batches over the same user set reuse it),
+    * packs each grid index's per-cell coefficient planes
+      ``[G*G, 3, 3, L]`` once (memoized on the index; incrementally
+      re-packed for the cells a :meth:`refit_index` touches),
+    * compacts the stacked plane/base tables to the user-OCCUPIED cells
+      (``cell_map`` becomes a rank into that compact axis — empty fringe
+      cells never ship to the device), and
+    * dispatches one ``(q, user-block)`` scalar-prefetch kernel where each
+      program instance stages one query's planes for one cell into VMEM —
+      ``[BU x L]`` edge evaluations plus ``base[q, cell]``.
+
+    Everything host-side (bucketing, packing, stacking) runs in
+    :meth:`prepare_batch` (``t_filter_s``); :meth:`count_batch` is the one
+    device dispatch plus the unsort scatter that drops padding rows.
+    Counts are bit-identical to the ``grid`` backend (property-tested in
+    ``tests/test_grid_pallas.py``).
+    """
+
+    name = "grid-pallas"
+    kernel_backend = "pallas"
+    interpret_mode_on_cpu = True
+    _BUCKET_CACHE_CAP = 4
+
+    @property
+    def lane_pad(self) -> int:
+        """Lane padding of the packed planes' list axis: the TPU lane
+        width for the compiled Mosaic kernel; interpret mode (a
+        correctness tool) has no lane constraint and a narrow pad keeps
+        its per-step operand slicing cheap."""
+        return 128 if not _ops.pallas_interpret_default() else 8
+
+    def __init__(self) -> None:
+        # bucketing memo: (users identity, rect, G) -> sorted arrays.  The
+        # engine's resident xs/ys arrays are stable objects, so identity is
+        # the cheap key; a weakref guard catches id() reuse after gc.
+        self._bucket_cache: "collections.OrderedDict[tuple, tuple]" = (
+            collections.OrderedDict()
+        )
+        self._bucket_lock = threading.Lock()
+
+    # ---- packed per-cell planes (memoized on the grid index) ------------
+    def _planes_for(self, grid) -> np.ndarray:
+        store = getattr(grid, "_cell_planes", None)
+        if store is None:
+            store = {}
+            grid._cell_planes = store
+        planes = store.get(self.lane_pad)
+        if planes is None:
+            planes = pack_cell_coeff_planes(grid, lane_pad=self.lane_pad)
+            store[self.lane_pad] = planes
+        return planes
+
+    # ---- user bucketing (shared across batches over one user set) -------
+    def _buckets_for(self, xs, ys, rect, G: int):
+        """``(xs_s, ys_s, order, ranks, occ, block)`` for one user set.
+
+        ``occ`` lists the user-occupied cell ids and ``ranks`` maps each
+        user block into that compact axis — the plane/base tables shipped
+        to the device carry only occupied cells.
+        """
+        n = int(xs.shape[0])
+        key = (id(xs), n, rect, int(G))
+        with self._bucket_lock:
+            hit = self._bucket_cache.get(key)
+            if hit is not None and hit[0]() is xs:
+                self._bucket_cache.move_to_end(key)
+                return hit[1]
+        xs_np = np.asarray(xs, np.float32)
+        ys_np = np.asarray(ys, np.float32)
+        xs_s, ys_s, order, cell_map, nb = prepare_cell_buckets(
+            xs_np, ys_np, rect, G, block=None
+        )
+        block = xs_s.shape[0] // nb if nb else 0
+        occ = np.unique(cell_map)
+        ranks = np.searchsorted(occ, cell_map).astype(np.int32)
+        buckets = (jnp.asarray(xs_s), jnp.asarray(ys_s), order, ranks, occ, block)
+        try:
+            ref = weakref.ref(xs)
+        except TypeError:  # non-weakref-able array type: pin it instead
+            ref = (lambda o: (lambda: o))(xs)
+        with self._bucket_lock:
+            self._bucket_cache[key] = (ref, buckets)
+            while len(self._bucket_cache) > self._BUCKET_CACHE_CAP:
+                self._bucket_cache.popitem(last=False)
+        return buckets
+
+    # ---- filter phase ----------------------------------------------------
+    def build_index(self, scene: Scene, *, grid_g: int = 64):
+        grid = super().build_index(scene, grid_g=grid_g)
+        self._planes_for(grid)  # pack eagerly: host work belongs to filter
+        return grid
+
+    def refit_index(
+        self,
+        index,
+        old_scene: Scene,
+        new_scene: Scene,
+        changed: np.ndarray,
+        *,
+        grid_g: int = 64,
+    ):
+        new_grid, was_refit = super().refit_index(
+            index, old_scene, new_scene, changed, grid_g=grid_g
+        )
+        if was_refit:
+            # incremental plane re-pack: refit_grid preserves the padded
+            # list width, so only cells whose candidate list changed — or
+            # that list a changed triangle (its coefficients moved) — need
+            # their [3, 3, L] planes rewritten
+            store = getattr(index, "_cell_planes", None) or {}
+            old_planes = store.get(self.lane_pad)
+            if old_planes is not None:
+                touched = np.flatnonzero(
+                    np.any(index.lists != new_grid.lists, axis=1)
+                    | np.isin(new_grid.lists, np.asarray(changed)).any(axis=1)
+                )
+                new_grid._cell_planes = {
+                    self.lane_pad: repack_cell_coeff_planes(
+                        old_planes, new_grid, touched
+                    )
+                }
+        return new_grid, was_refit
+
+    def prepare_batch(self, req: BatchRequest):
+        indexes = req.indexes
+        if indexes is None:
+            indexes = [self.build_index(s, grid_g=req.grid_g) for s in req.scenes]
+        G = indexes[0].G
+        rect = indexes[0].rect
+        if any(g.G != G for g in indexes):
+            raise ValueError("all grids in a batch must share G")
+        if any(g.rect != rect for g in indexes):
+            raise ValueError("all grids in a batch must share the domain rect")
+        xs_s, ys_s, order, ranks, occ, block = self._buckets_for(
+            req.xs, req.ys, rect, G
+        )
+        planes = [self._planes_for(g)[occ] for g in indexes]  # [n_occ, 3, 3, L]
+        L = max(p.shape[-1] for p in planes)
+        if all(p.shape[-1] == L for p in planes):
+            planes_q = np.stack(planes)
+        else:
+            planes_q = np.zeros((len(planes),) + planes[0].shape[:-1] + (L,), np.float32)
+            planes_q[:, :, :, 2, :] = -1.0  # degenerate pad (never inside)
+            for i, p in enumerate(planes):
+                planes_q[i, ..., : p.shape[-1]] = p
+        base_q = np.stack([g.base[occ] for g in indexes]).astype(np.int32)
+        return (xs_s, ys_s, order, ranks, block, base_q, planes_q)
+
+    # ---- verify phase ----------------------------------------------------
+    def count(self, req: QueryRequest) -> np.ndarray:
+        grid = req.index
+        if grid is None:
+            grid = self.build_index(req.scene, grid_g=req.grid_g)
+        xs_s, ys_s, order, ranks, occ, block = self._buckets_for(
+            req.xs, req.ys, grid.rect, grid.G
+        )
+        counts = _ops.grid_count_cells(
+            xs_s, ys_s, ranks, grid.base[occ], self._planes_for(grid)[occ],
+            block=block, backend=self.kernel_backend,
+        )
+        return unsort_cell_counts(np.asarray(counts), order, int(req.xs.shape[0]))
+
+    def count_batch(self, req: BatchRequest, prepared) -> np.ndarray:
+        if req.dispatch is not None:
+            return np.asarray(req.dispatch(prepared))
+        xs_s, ys_s, order, ranks, block, base_q, planes_q = prepared
+        counts = _ops.grid_count_cells_batch(
+            xs_s, ys_s, ranks, base_q, planes_q,
+            block=block, backend=self.kernel_backend,
+        )
+        return unsort_cell_counts(np.asarray(counts), order, int(req.xs.shape[0]))
+
+
+@register_backend
+class GridPallasRefBackend(GridPallasBackend):
+    """Pure-jnp execution of the bucketed grid path (fast on CPU; same
+    math — mirrors the dense/dense-ref pairing)."""
+
+    name = "grid-pallas-ref"
+    kernel_backend = "ref"
+    interpret_mode_on_cpu = False
+    lane_pad = 1  # no TPU lane constraint: stop at the real max list length
 
 
 # --------------------------------------------------------------------------

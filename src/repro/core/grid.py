@@ -25,6 +25,7 @@ the dense count in ``tests/test_core_rknn.py``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -254,6 +255,7 @@ def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.n
     return base, lists, coeffs
 
 
+@functools.partial(jax.jit, static_argnums=(5, 6))
 def grid_hit_counts_batch_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     """Batched multi-query grid counting: ``[Q, N]`` counts in one dispatch.
 
@@ -261,12 +263,22 @@ def grid_hit_counts_batch_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     ``[Q, Mt, 3, 3]`` (from :func:`stack_grids`).  The user→cell assignment
     is shared across queries (one domain rect), so it is computed once and
     the per-query work is a pure gather + edge-function evaluation.
+
+    Jitted (``rect``/``G`` static) like every other grid-family execution:
+    all of them must round the ``a·x + b·y + c`` edge evaluation the same
+    way (XLA fuses it into FMAs), so a knife-edge ``>= 0`` tie cannot
+    decide differently between the oracle and the bucketed kernels.
     """
     xs = jnp.asarray(xs)
     ys = jnp.asarray(ys)
     base = jnp.asarray(base)
     lists = jnp.asarray(lists)
     coeffs = jnp.asarray(coeffs)
+    if coeffs.shape[1] == 0:  # occluder-free scenes: keep the gather legal
+        coeffs = jnp.broadcast_to(
+            jnp.asarray([0.0, 0.0, -1.0], coeffs.dtype),  # degenerate edge
+            (coeffs.shape[0], 1, 3, 3),
+        )
     w = rect.width / G
     h = rect.height / G
     cx = jnp.clip(jnp.floor((xs - rect.xmin) / w), 0, G - 1).astype(jnp.int32)
@@ -284,13 +296,20 @@ def grid_hit_counts_batch_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     return jax.vmap(one)(base, lists, coeffs)
 
 
+@functools.partial(jax.jit, static_argnums=(5, 6))
 def grid_hit_counts_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     """Vectorized grid query (pure jnp; Pallas variant in kernels/).
 
     ``hits[u] = base[cell(u)] + sum_t in list[cell(u)] inside(u, t)``.
+    Jitted with ``rect``/``G`` static — see the batched variant for why.
     """
     xs = jnp.asarray(xs)
     ys = jnp.asarray(ys)
+    coeffs = jnp.asarray(coeffs)
+    if coeffs.shape[0] == 0:  # occluder-free scenes: keep the gather legal
+        coeffs = jnp.broadcast_to(
+            jnp.asarray([0.0, 0.0, -1.0], coeffs.dtype), (1, 3, 3)
+        )
     w = rect.width / G
     h = rect.height / G
     cx = jnp.clip(jnp.floor((xs - rect.xmin) / w), 0, G - 1).astype(jnp.int32)
@@ -298,7 +317,7 @@ def grid_hit_counts_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     cell = cx * G + cy
     cand = jnp.asarray(lists)[cell]  # [N, L]
     safe = jnp.maximum(cand, 0)
-    e = jnp.asarray(coeffs)[safe]  # [N, L, 3, 3]
+    e = coeffs[safe]  # [N, L, 3, 3]
     ev = e[..., 0] * xs[:, None, None] + e[..., 1] * ys[:, None, None] + e[..., 2]
     inside = jnp.all(ev >= 0.0, axis=-1) & (cand >= 0)
     return jnp.asarray(base)[cell] + inside.sum(axis=-1).astype(jnp.int32)

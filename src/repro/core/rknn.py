@@ -9,8 +9,9 @@ cannot amortize anything) and therefore keep their historical semantics
 bit-for-bit: same masks, same counts, same two-stage timing convention.
 
 Backend names resolve through the registry in :mod:`repro.core.backends`
-(``dense``, ``dense-ref``, ``grid``, ``bvh``, ``brute`` built in; new
-backends register a class instead of threading through dispatch ladders).
+(``dense``, ``dense-ref``, ``grid``, ``grid-pallas``, ``grid-pallas-ref``,
+``bvh``, ``brute`` built in; new backends register a class instead of
+threading through dispatch ladders).
 
 Timing semantics (§4.1 / [62] two-stage convention): *filtering*
 (``t_filter_s``) covers everything on the host that prepares the query —

@@ -37,7 +37,28 @@ import numpy as np
 from repro.core.brute import rank_counts_np
 from repro.core.results import RkNNResult
 
-__all__ = ["ContinuousQuery"]
+__all__ = ["ContinuousQuery", "influence_dirty_mask"]
+
+
+def influence_dirty_mask(handles, changed_pos: np.ndarray) -> np.ndarray:
+    """One vectorized influence-zone dirty test across all live handles.
+
+    ``changed_pos`` is the ``[C, 2]`` set of facility positions a
+    facility-only update touches (both endpoints of moves, deleted rows,
+    inserts).  Returns ``[H]`` bool: True when any changed position lies
+    strictly inside the handle's influence radius — exactly the per-handle
+    :meth:`ContinuousQuery._patch_facility` distance test, batched into
+    one ``[H, C]`` distance matrix so thousands of standing queries pay
+    one numpy pass per update instead of a Python loop each.
+    """
+    if not len(handles) or not len(changed_pos):
+        return np.zeros(len(handles), bool)
+    q_pts = np.stack([h.q_pt for h in handles])  # [H, 2]
+    infl = np.array([h._influence for h in handles])  # [H]
+    d = np.linalg.norm(
+        np.asarray(changed_pos, np.float64)[None, :, :] - q_pts[:, None, :], axis=-1
+    )  # [H, C]
+    return (d < infl[:, None]).any(axis=1)
 
 
 def _d2(users: np.ndarray, p: np.ndarray) -> np.ndarray:
@@ -147,6 +168,23 @@ class ContinuousQuery:
         if aff.any():
             self._counts[aff] += delta
         return True
+
+    def _on_update_clean(self, ctx, had_facility_changes: bool) -> None:
+        """Close out an update the batched influence-zone test proved
+        cannot touch this handle: remap the tracked facility row through
+        the update's id map and count the skip — bit-identical to what
+        :meth:`_on_update` would have done, minus the per-position
+        distance loop.  Only valid for facility-only deltas where the
+        handle's own facility neither moved nor died (the engine's
+        batched test forces those handles onto the exact path).
+        """
+        if not self.alive:
+            return
+        if self.q_idx is not None:
+            self.q_idx = int(ctx.map_f[self.q_idx])
+        if had_facility_changes:
+            self.n_skipped += 1
+        self.version = ctx.version
 
     def _on_update(self, ctx) -> None:
         """Apply one update (ctx is the engine's ``_UpdateContext``)."""

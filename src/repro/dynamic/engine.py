@@ -25,10 +25,11 @@ rebuilding it:
     cost profile and its own observed EMAs);
   - **prepared-batch LRU / plan memos** — cleared (they alias user
     arrays and scene lists wholesale; per-entry surgery is not worth it);
-  - **continuous queries** — each registered
-    :class:`~repro.dynamic.continuous.ContinuousQuery` runs its
-    influence-zone dirty test and patches or recounts only when the
-    delta could touch it.
+  - **continuous queries** — one *vectorized* influence-zone dirty test
+    runs across all live :class:`~repro.dynamic.continuous.ContinuousQuery`
+    handles per update (:func:`~repro.dynamic.continuous.influence_dirty_mask`);
+    only the handles it marks dirty fall into the exact per-handle patch,
+    the rest take a remap-and-skip fast path.
 
 Equivalence contract (property-tested): after any sequence of
 ``apply_updates``, every query path on this engine returns bit-identical
@@ -48,7 +49,7 @@ import jax.numpy as jnp
 from repro.core.backends import get_backend
 from repro.core.engine import RkNNConfig, RkNNEngine
 from repro.core.pruning import adaptive_grid
-from repro.dynamic.continuous import ContinuousQuery
+from repro.dynamic.continuous import ContinuousQuery, influence_dirty_mask
 from repro.dynamic.policy import RefitPolicy
 from repro.dynamic.refit import refit_scene, remap_scene, scene_update_safe
 from repro.dynamic.updates import UpdateBatch, apply_to_points, changed_positions
@@ -220,12 +221,17 @@ class DynamicEngine(RkNNEngine):
         # closed/dead handles are dropped here, not at close() time — the
         # handle list is only ever touched on the update path (single-writer)
         self._continuous = [cq for cq in self._continuous if cq.alive]
-        for cq in self._continuous:
-            before = (cq.n_patched, cq.n_skipped, cq.n_events)
-            cq._on_update(ctx)
-            report.continuous_patched += cq.n_patched - before[0]
-            report.continuous_skipped += cq.n_skipped - before[1]
-            report.continuous_events += cq.n_events - before[2]
+        if self._continuous:
+            dirty = self._dirty_continuous(batch, changed_pos)
+            for cq, is_dirty in zip(self._continuous, dirty):
+                before = (cq.n_patched, cq.n_skipped, cq.n_events)
+                if is_dirty:
+                    cq._on_update(ctx)
+                else:
+                    cq._on_update_clean(ctx, len(changed_pos) > 0)
+                report.continuous_patched += cq.n_patched - before[0]
+                report.continuous_skipped += cq.n_skipped - before[1]
+                report.continuous_events += cq.n_events - before[2]
 
         report.t_update_s = time.perf_counter() - t0
         self.update_stats.n_updates += 1
@@ -239,6 +245,30 @@ class DynamicEngine(RkNNEngine):
         if len(self._update_log) > 128:
             del self._update_log[0]
         return report
+
+    # ------------------------------------------------------------------
+    def _dirty_continuous(self, batch: UpdateBatch, changed_pos: np.ndarray):
+        """``[H]`` bool: which live handles this delta could actually touch.
+
+        One vectorized influence-zone test across all standing queries
+        (:func:`repro.dynamic.continuous.influence_dirty_mask`) replaces
+        the per-handle Python loop; only handles marked dirty fall into
+        the exact per-handle patch.  User-side deltas dirty every handle
+        (rows/thresholds must be reconciled), and a handle whose own
+        facility moved or died is always exact-patched (its influence
+        geometry itself changes, which the distance test cannot certify).
+        """
+        n = len(self._continuous)
+        if batch.touches_users:
+            return np.ones(n, bool)
+        dirty = influence_dirty_mask(self._continuous, changed_pos)
+        own = np.concatenate([batch.facility_delete, batch.facility_move[0]])
+        if len(own):
+            q_idx = np.array(
+                [-1 if cq.q_idx is None else cq.q_idx for cq in self._continuous]
+            )
+            dirty |= np.isin(q_idx, own)
+        return dirty
 
     # ------------------------------------------------------------------
     def _refit_user_arrays(self, batch: UpdateBatch, report: UpdateReport) -> None:

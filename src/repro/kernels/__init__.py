@@ -3,13 +3,29 @@
 * ``raycast``      — dense occluder hit counting (the ray-casting stage),
                      single-query and batched (``[Q]`` grid axis) variants
 * ``rank_count``   — distance-rank counting (brute / "InfZone-GPU" baseline)
-* ``grid_raycast`` — grid-culled counting (the TPU BVH analogue)
+* ``grid_raycast`` — grid-culled counting (the TPU BVH analogue):
+                     cell-bucketed scalar-prefetch kernels, single-query
+                     and batched ``(q, user-block)`` variants, plus the
+                     host-side bucketing / plane-packing helpers
 * ``ops``          — jit'd public wrappers (padding, backend selection,
                      batched multi-query dispatch)
 * ``ref``          — pure-jnp oracles used by the allclose sweeps
 """
 
 from repro.kernels.compat import tpu_compiler_params
-from repro.kernels.ops import rank_count, raycast_count, raycast_count_batch
+from repro.kernels.ops import (
+    grid_count_cells,
+    grid_count_cells_batch,
+    rank_count,
+    raycast_count,
+    raycast_count_batch,
+)
 
-__all__ = ["raycast_count", "rank_count", "raycast_count_batch", "tpu_compiler_params"]
+__all__ = [
+    "raycast_count",
+    "rank_count",
+    "raycast_count_batch",
+    "grid_count_cells",
+    "grid_count_cells_batch",
+    "tpu_compiler_params",
+]

@@ -31,6 +31,8 @@ __all__ = [
     "raycast_count_batch",
     "rank_count",
     "rank_count_batch",
+    "grid_count_cells",
+    "grid_count_cells_batch",
     "pallas_interpret_default",
 ]
 
@@ -197,6 +199,132 @@ def raycast_count_batch(
         xs_p, ys_p, A, B, C, bu=bu_eff, bm=bm_eff, interpret=bool(interpret)
     )
     return out[:, :n]
+
+
+#: Element budget for one [Q, chunk, block, L] edge-evaluation temp of the
+#: bucketed ref path (~16 MB f32) — mirrors _USER_CHUNK's role on the
+#: dense path.
+_CELL_CHUNK_ELEMS = 4_194_304
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _grid_cells_batch_ref_chunked(xs_b, ys_b, cell_map, planes, chunk: int):
+    """Jitted + block-chunked bucketed oracle: bounds the
+    ``[Q, chunk, block, L]`` edge-evaluation temp so large user sets don't
+    blow the host heap under a big query batch (same convention as
+    ``_raycast_batch_ref_chunked``)."""
+    nb, block = xs_b.shape
+    pad = (-nb) % chunk
+    xs_p = jnp.pad(xs_b, ((0, pad), (0, 0)), constant_values=2e9)
+    ys_p = jnp.pad(ys_b, ((0, pad), (0, 0)), constant_values=2e9)
+    cm_p = jnp.pad(cell_map, (0, pad))
+    xc = xs_p.reshape(-1, chunk, block)
+    yc = ys_p.reshape(-1, chunk, block)
+    cc = cm_p.reshape(-1, chunk)
+
+    def one(args):
+        x, y, cm = args
+        return _ref.grid_cells_count_batch_ref(
+            x.reshape(-1), y.reshape(-1), cm, planes
+        )  # [Q, chunk*block]
+
+    out = jax.lax.map(one, (xc, yc, cc))  # [n_chunks, Q, chunk*block]
+    q_n = planes.shape[0]
+    return jnp.moveaxis(out, 1, 0).reshape(q_n, -1)[:, : nb * block]
+
+
+@jax.jit
+def _grid_cells_batch_ref_jit(xs_s, ys_s, cell_map, planes):
+    return _ref.grid_cells_count_batch_ref(xs_s, ys_s, cell_map, planes)
+
+
+def grid_count_cells_batch(
+    xs_sorted,
+    ys_sorted,
+    cell_map,
+    base,
+    planes,
+    *,
+    block: int,
+    backend: str = "pallas",
+    interpret: bool | None = None,
+):
+    """Batched cell-bucketed grid hit counts: ``[Q, n_sorted]`` int32.
+
+    ``xs_sorted/ys_sorted``: ``[n_blocks*block]`` cell-sorted padded users
+    (from :func:`repro.kernels.grid_raycast.prepare_cell_buckets` — the
+    sort is shared across the batch's queries, one domain rect);
+    ``cell_map``: ``[n_blocks]``; ``base``: ``[Q, G*G]``; ``planes``:
+    ``[Q, G*G, 3, 3, L]`` stacked per-query cell coefficient planes.
+    Counts stay in sorted order — unscatter with
+    :func:`repro.kernels.grid_raycast.unsort_cell_counts`.
+    """
+    from repro.kernels.grid_raycast import grid_raycast_cells_batch
+
+    xs_sorted = jnp.asarray(xs_sorted, jnp.float32)
+    ys_sorted = jnp.asarray(ys_sorted, jnp.float32)
+    base = jnp.asarray(base, jnp.int32)
+    planes = jnp.asarray(planes, jnp.float32)
+    q_n = planes.shape[0]
+    nb = int(cell_map.shape[0])
+    if nb == 0:
+        return jnp.zeros((q_n, 0), jnp.int32)
+    cell_map = jnp.asarray(cell_map, jnp.int32)
+    if backend == "ref":
+        L = int(planes.shape[-1])
+        chunk = max(int(_CELL_CHUNK_ELEMS) // max(q_n * block * L, 1), 1)
+        if chunk < nb:
+            chunk = max(1 << int(np.log2(chunk)), 1)  # sticky pow2: fewer retraces
+            counts = _grid_cells_batch_ref_chunked(
+                xs_sorted.reshape(nb, block),
+                ys_sorted.reshape(nb, block),
+                cell_map,
+                planes,
+                chunk=chunk,
+            )
+        else:
+            counts = _grid_cells_batch_ref_jit(xs_sorted, ys_sorted, cell_map, planes)
+    elif backend == "pallas":
+        if interpret is None:
+            interpret = pallas_interpret_default()
+        counts = grid_raycast_cells_batch(
+            xs_sorted, ys_sorted, cell_map, planes,
+            block=block, interpret=bool(interpret),
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    # base[q, cell] is added outside the kernel: a [Q, G*G] scalar table
+    # has no place in the prefetch SMEM budget at serving Q
+    cells_u = jnp.repeat(cell_map, block)  # [n_sorted]
+    return counts + base[:, cells_u]
+
+
+def grid_count_cells(
+    xs_sorted,
+    ys_sorted,
+    cell_map,
+    base,
+    planes,
+    *,
+    block: int,
+    backend: str = "pallas",
+    interpret: bool | None = None,
+):
+    """Single-query bucketed grid hit counts: ``[n_sorted]`` int32.
+
+    ``base``: ``[G*G]``; ``planes``: ``[G*G, 3, 3, L]``.  Same contract as
+    :func:`grid_count_cells_batch` at ``Q = 1``.
+    """
+    return grid_count_cells_batch(
+        xs_sorted,
+        ys_sorted,
+        cell_map,
+        jnp.asarray(base, jnp.int32)[None],
+        jnp.asarray(planes, jnp.float32)[None],
+        block=block,
+        backend=backend,
+        interpret=interpret,
+    )[0]
 
 
 def rank_count(

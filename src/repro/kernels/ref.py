@@ -17,6 +17,7 @@ __all__ = [
     "rank_count_ref",
     "rank_count_batch_ref",
     "grid_raycast_ref",
+    "grid_cells_count_batch_ref",
 ]
 
 
@@ -88,6 +89,38 @@ def rank_count_ref(xs, ys, fx, fy, thr):
     thr = jnp.asarray(thr, jnp.float32)
     d2 = (xs[:, None] - fx[None, :]) ** 2 + (ys[:, None] - fy[None, :]) ** 2
     return (d2 < thr[:, None]).sum(axis=-1).astype(jnp.int32)
+
+
+def grid_cells_count_batch_ref(xs_sorted, ys_sorted, cell_map, planes):
+    """Batched cell-bucketed counting (oracle for the batched grid kernel).
+
+    ``xs_sorted, ys_sorted``: ``[n_blocks*block]`` cell-sorted padded user
+    coordinates; ``cell_map``: ``[n_blocks]`` cell id per user block;
+    ``planes``: ``[Q, G*G, 3, 3, L]`` stacked per-query cell coefficient
+    planes.  Returns partial-list hit counts ``[Q, n_blocks*block]`` int32
+    in sorted order (the caller adds ``base[q, cell]``), mirroring the
+    kernel: one ``[n_blocks, 3, 3, L]`` plane gather per query instead of
+    the gather-bound per-user ``[Q, N, L, 3, 3]`` temporary.
+    """
+    xs_sorted = jnp.asarray(xs_sorted, jnp.float32)
+    ys_sorted = jnp.asarray(ys_sorted, jnp.float32)
+    planes = jnp.asarray(planes, jnp.float32)
+    nb = cell_map.shape[0]
+    block = xs_sorted.shape[0] // max(nb, 1)
+    x = xs_sorted.reshape(nb, block)  # [NB, B]
+    y = ys_sorted.reshape(nb, block)
+    p = planes[:, cell_map]  # [Q, NB, 3, 3, L]
+
+    def ev(e):
+        return (
+            x[None, :, :, None] * p[:, :, e, 0][:, :, None, :]
+            + y[None, :, :, None] * p[:, :, e, 1][:, :, None, :]
+            + p[:, :, e, 2][:, :, None, :]
+        )  # [Q, NB, B, L]
+
+    inside = (ev(0) >= 0.0) & (ev(1) >= 0.0) & (ev(2) >= 0.0)
+    counts = inside.sum(axis=-1).astype(jnp.int32)  # [Q, NB, B]
+    return counts.reshape(planes.shape[0], nb * block)
 
 
 def grid_raycast_ref(xs, ys, base, lists, coeffs, rect_lo, rect_size, G: int):

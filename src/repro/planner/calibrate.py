@@ -105,11 +105,18 @@ def calibrate(
     ``scenarios`` overrides the grid (tests pass tiny shapes); ``fast``
     selects the CI-sized grid.  Returns the fitted, versioned profile —
     the caller decides whether to save and/or activate it.
+
+    The default backend set is :func:`repro.core.backends.timeable_backends`:
+    any registered backend is calibratable, but kernel backends running in
+    interpret mode on this host (``interpret_mode_on_cpu``) are skipped by
+    default — their interpret wall time is a property of the simulator, not
+    of the backend, and a profile fitted to it would misprice a real TPU.
+    Pass ``backends=`` explicitly to measure them anyway.
     """
     if backends is None:
-        from repro.core.backends import concrete_backends
+        from repro.core.backends import timeable_backends
 
-        backends = concrete_backends()
+        backends = timeable_backends()
     if scenarios is None:
         scenarios = calibration_grid(fast=fast, seed=seed)
     workloads = [sc.generate() for sc in scenarios]

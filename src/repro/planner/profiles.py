@@ -280,6 +280,15 @@ def _prior_times(name: str, s: WorkloadShape) -> tuple[float, float]:
         return q * scene, slow * (3e-4 + 4e-9 * q * u * m)
     if name == "grid":
         return q * (scene + 2e-3 + 4e-5 * m), 5e-4 + 1.2e-8 * q * u * max(m / 6.0, 4.0)
+    if name in ("grid-pallas", "grid-pallas-ref"):
+        # cell-bucketed kernel: the user->cell sort is shared across the
+        # batch (u-term outside q), plane packing rides the index build;
+        # verify drops the per-user gather to per-cell plane staging
+        slow = 40.0 if name == "grid-pallas" else 1.0  # interpret-mode penalty
+        return (
+            q * (scene + 2e-3 + 5e-5 * m) + 3e-8 * u,
+            slow * (5e-4 + 4e-9 * q * u * max(m / 6.0, 4.0)),
+        )
     if name == "bvh":
         # per-lane while_loop under vmap: SIMD-hostile, pays ~O(m) per user
         return q * (scene + 5e-4 + 1.2e-5 * m), 1e-3 + 1.5e-7 * q * u * m
@@ -291,7 +300,16 @@ def _prior_times(name: str, s: WorkloadShape) -> tuple[float, float]:
     raise KeyError(name)
 
 
-_PRIOR_BACKENDS = ("dense", "dense-ref", "grid", "bvh", "brute", "slice")
+_PRIOR_BACKENDS = (
+    "dense",
+    "dense-ref",
+    "grid",
+    "grid-pallas",
+    "grid-pallas-ref",
+    "bvh",
+    "brute",
+    "slice",
+)
 
 
 def builtin_profile() -> PlannerProfile:

@@ -163,6 +163,11 @@ def calibration_grid(fast: bool = True, seed: int = 0) -> list[Scenario]:
             (120, 8_000, 8, 8),
             (500, 12_000, 8, 8),  # dense users — brute's |F|·|U| wall
             (1_000, 2_000, 4, 4),  # dense facilities, small k
+            # serving-batch shapes: the scenario sweep runs Q=16 — without
+            # Q>8 support points the fitted Q exponent extrapolates badly
+            # exactly where the planner is graded
+            (60, 8_000, 10, 16),
+            (400, 10_000, 10, 16),
         ]
     else:
         spec = [

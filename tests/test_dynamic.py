@@ -305,6 +305,87 @@ def test_continuous_query_skips_far_updates_and_emits_on_change_only():
     np.testing.assert_array_equal(res.mask, truth < k)
 
 
+def test_vectorized_dirty_test_routes_handles(monkeypatch):
+    """One batched influence-zone test decides per update which handles
+    run the exact patch: provably-clean handles never enter
+    ``_on_update`` (counted via monkeypatch), user deltas dirty every
+    handle, and results stay bitwise-exact either way."""
+    from repro.dynamic.continuous import ContinuousQuery, influence_dirty_mask
+
+    F, U, _ = _instance(45)
+    F[5] = [0.1, 0.1]
+    F[9] = [0.15, 0.12]
+    U_local = np.clip(
+        np.random.default_rng(2).normal(0.12, 0.03, (120, 2)), 0.0, 0.3
+    )
+    dyn = DynamicEngine(F, U_local, RkNNConfig(backend="dense-ref"))
+    h1 = dyn.register_continuous(5, 2)
+    h2 = dyn.register_continuous(9, 2)
+
+    calls = []
+    orig = ContinuousQuery._on_update
+
+    def spy(self, ctx):
+        calls.append(self)
+        return orig(self, ctx)
+
+    monkeypatch.setattr(ContinuousQuery, "_on_update", spy)
+
+    # far corner insert: outside both influence zones -> neither patches
+    dyn.apply_updates(UpdateBatch(facility_insert=[[0.99, 0.99]]))
+    assert calls == []
+    assert h1.n_skipped == 1 and h2.n_skipped == 1
+    assert h1.version == dyn.version and h2.version == dyn.version
+
+    # the batched mask agrees with the per-handle distance test
+    far = np.array([[0.99, 0.99]])
+    near = np.array([[0.1, 0.12]])
+    assert not influence_dirty_mask([h1, h2], far).any()
+    assert influence_dirty_mask([h1, h2], near).all()
+
+    # doorstep insert: both handles take the exact patch path
+    dyn.apply_updates(UpdateBatch(facility_insert=near))
+    assert len(calls) == 2
+
+    # user deltas reconcile rows/thresholds: every handle is dirty
+    dyn.apply_updates(UpdateBatch(user_insert=[[0.2, 0.2]]))
+    assert len(calls) == 4
+
+    for h in (h1, h2):
+        truth = rank_counts_np(
+            dyn.users, dyn.facilities, dyn.facilities[h.q_idx], exclude=h.q_idx
+        )
+        np.testing.assert_array_equal(h.counts, truth)
+
+
+def test_clean_skip_still_remaps_tracked_facility(monkeypatch):
+    """A facility delete far outside a handle's influence zone takes the
+    clean path but must still remap the tracked row id through the
+    compaction."""
+    from repro.dynamic.continuous import ContinuousQuery
+
+    F, U, _ = _instance(46)
+    F[9] = [0.1, 0.1]
+    U_local = np.clip(
+        np.random.default_rng(3).normal(0.1, 0.02, (80, 2)), 0.0, 0.25
+    )
+    dyn = DynamicEngine(F, U_local, RkNNConfig(backend="dense-ref"))
+    cq = dyn.register_continuous(9, 3)
+    monkeypatch.setattr(
+        ContinuousQuery, "_on_update",
+        lambda self, ctx: pytest.fail("clean handle entered the exact patch"),
+    )
+    F2 = dyn.facilities.copy()
+    far_row = int(np.argmax(np.linalg.norm(F2 - [0.1, 0.1], axis=1)))
+    assert far_row < 9  # deletion shifts the tracked id down
+    dyn.apply_updates(UpdateBatch(facility_delete=[far_row]))
+    assert cq.q_idx == 8 and cq.n_skipped == 1
+    truth = rank_counts_np(
+        dyn.users, dyn.facilities, dyn.facilities[8], exclude=8
+    )
+    np.testing.assert_array_equal(cq.counts, truth)
+
+
 def test_continuous_query_dies_with_its_facility():
     F, U, _ = _instance(41)
     dyn = DynamicEngine(F, U)

@@ -184,8 +184,14 @@ def test_stream_reraises_producer_exception():
 
 
 def test_serve_stream_alias_reraises_producer_exception():
+    import warnings
+
     F, U, _ = _instance(53)
-    server = RkNNServer(F, U)
+    with warnings.catch_warnings():
+        # once-per-process deprecation; asserted in test_dynamic — don't
+        # leak it into tier-1 output when this test triggers it first
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = RkNNServer(F, U)
 
     def bad_batches():
         raise ValueError("upstream queue died")
@@ -234,8 +240,54 @@ def test_get_backend_unknown_raises():
 
 
 def test_builtin_registration_order():
-    assert available_backends()[:5] == ("dense", "dense-ref", "grid", "bvh", "brute")
-    assert BACKENDS == ("dense", "dense-ref", "grid", "bvh", "brute")
+    builtin = (
+        "dense",
+        "dense-ref",
+        "grid",
+        "grid-pallas",
+        "grid-pallas-ref",
+        "bvh",
+        "brute",
+    )
+    assert available_backends()[: len(builtin)] == builtin
+    assert BACKENDS == builtin
+
+
+def test_dense_prepare_batch_pads_from_real_tris():
+    """With ``req.mp`` unset (the direct-protocol path), the stacked
+    ``[Q, Mp, 3, 3]`` tensor is sized from the REAL triangle counts — a
+    scene pre-padded to a big static shape must not inflate the batch."""
+    import jax.numpy as jnp
+
+    from repro.core.backends import BatchRequest
+    from repro.core.geometry import Rect
+    from repro.core.scene import build_scene
+
+    F, U, rng = _instance(77, M=30)
+    rect = Rect.from_points(F, U)
+    scenes = [
+        build_scene(F, q, 3, rect, pad_to=1024, users_hint=U) for q in (0, 1)
+    ]
+    assert all(s.tris.shape[0] == 1024 for s in scenes)
+    assert max(s.n_tris for s in scenes) <= 128
+    b = get_backend("dense-ref")
+    req = BatchRequest(
+        xs=jnp.asarray(U[:, 0], jnp.float32),
+        ys=jnp.asarray(U[:, 1], jnp.float32),
+        k=3,
+        rect=rect,
+        scenes=scenes,
+    )
+    prepared = b.prepare_batch(req)
+    assert prepared.shape == (2, 128, 3, 3)  # _next_pad(max n_tris), not 1024
+    counts = b.count_batch(req, prepared)
+    # and the tighter pad changes nothing: same counts as the padded stack
+    wide = b.count_batch(
+        req, b.prepare_batch(BatchRequest(
+            xs=req.xs, ys=req.ys, k=3, rect=rect, scenes=scenes, mp=1024,
+        ))
+    )
+    np.testing.assert_array_equal(counts, wide)
 
 
 def test_custom_backend_plugs_into_engine():

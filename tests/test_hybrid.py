@@ -1,11 +1,37 @@
 """Paper future-work features: scene cache amortization + hybrid dispatch."""
 
+import os
+import warnings
+
 import numpy as np
 import pytest
 
+import repro.core.hybrid as hybrid_mod
 from repro.core.brute import rknn_brute_np
 from repro.core.hybrid import SceneCache, choose_engine, hybrid_rknn_query
 from repro.data.spatial import facility_user_split, road_network_points
+from repro.planner.profiles import (
+    get_active_profile,
+    load_runner_profile,
+    set_active_profile,
+)
+
+PROFILE_STORE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks",
+    "profiles",
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_profile_warning_leak():
+    """Keep the no-profile fallback warning out of tier-1 output: every
+    test in this module runs with the once-flag already spent (the
+    dedicated test below resets it and asserts the warning instead)."""
+    prev = hybrid_mod._warned_no_profile
+    hybrid_mod._warned_no_profile = True
+    yield
+    hybrid_mod._warned_no_profile = prev
 
 
 @pytest.fixture(scope="module")
@@ -62,6 +88,43 @@ def test_choose_engine_matches_measured_regimes():
     assert choose_engine(n_facilities=1_000, n_users=1_200_000, k=300) == "rt"
     assert choose_engine(n_facilities=10_000, n_users=100_000, k=1) == "slice"
     assert choose_engine(n_facilities=1_000, n_users=50_000, k=1) == "slice"
+
+
+def test_choose_engine_no_profile_warns_once():
+    """The hard-coded-constants fallback warns exactly once per process —
+    asserted here instead of leaking into tier-1 output."""
+    prev_prof = get_active_profile()
+    set_active_profile(None)
+    hybrid_mod._warned_no_profile = False
+    try:
+        with pytest.warns(RuntimeWarning, match="no active planner profile"):
+            choose_engine(n_facilities=100, n_users=1_000_000, k=25)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second call must stay silent
+            choose_engine(n_facilities=100, n_users=1_000_000, k=25)
+    finally:
+        hybrid_mod._warned_no_profile = True
+        set_active_profile(prev_prof)
+
+
+def test_choose_engine_with_committed_profile_is_silent():
+    """With the committed runner-class profile active, the frontier is a
+    live profile lookup: no fallback warning, decisions from the store."""
+    prof = load_runner_profile(PROFILE_STORE)
+    if prof is None:
+        pytest.skip("no committed profile for this runner class")
+    prev_prof = get_active_profile()
+    set_active_profile(prof)
+    hybrid_mod._warned_no_profile = False
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            for f, u, k in ((100, 1_000_000, 25), (10_000, 100_000, 1)):
+                assert choose_engine(f, u, k) in ("rt", "slice")
+        assert not hybrid_mod._warned_no_profile  # fallback path never taken
+    finally:
+        hybrid_mod._warned_no_profile = True
+        set_active_profile(prev_prof)
 
 
 def test_hybrid_auto_dispatch_is_exact(city):
