@@ -388,9 +388,10 @@ def scenario_sweep(
     the planner prices.  Acceptance criteria (ISSUE 3): per regime,
     ``backend`` (default ``auto``) is within 10% of the best fixed
     backend (``within10``); on the aggregate sweep it beats every single
-    fixed backend (``beats_all``).  ``chosen`` surfaces the planner's
-    ``explain()`` decisions; masks are asserted identical across all
-    backends.
+    fixed backend (``beats_all``), with ``agg_ratio`` (auto total / best
+    fixed total) as the noise-robust signal CI actually gates on.
+    ``chosen`` surfaces the planner's ``explain()`` decisions; masks are
+    asserted identical across all backends.
 
     The fixed set is :func:`repro.core.backends.timeable_backends` — every
     deployment backend whose wall time means something on this runtime.
@@ -474,12 +475,15 @@ def scenario_sweep(
                 )
             )
         beats_all = all(totals[backend] < totals[b] for b in others)
+        best_fixed = min(totals[b] for b in others) if others else totals[backend]
+        agg_ratio = totals[backend] / max(best_fixed, 1e-12)
         rows.append(
             dict(
                 name=f"scenario_aggregate_{backend}",
                 us_per_call=totals[backend] / max(total_q, 1) * 1e6,
                 derived=(
-                    f"beats_all={beats_all} chosen={dict(chosen_all)} "
+                    f"beats_all={beats_all} agg_ratio={agg_ratio:.2f} "
+                    f"chosen={dict(chosen_all)} "
                     + " ".join(f"{b}={totals[b]*1e3:.0f}ms" for b in others)
                     + f" calibration={t_cal:.1f}s source={prof_src}"
                 ),
@@ -491,7 +495,9 @@ def scenario_sweep(
 
 
 # ------------------------------------------- dynamic update streams (ours)
-def update_throughput(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+def update_throughput(
+    scale: float = DEFAULT_SCALE, n_queries: int = 0, concurrent: bool = False
+) -> list[dict]:
     """Refit vs rebuild-from-scratch under update streams (ISSUE 4).
 
     A standing Q-query workload is re-issued after every update step.  The
@@ -504,7 +510,14 @@ def update_throughput(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[
     low/high user drift, facility jitter (the scene-refit showcase), and
     facility churn.  Acceptance: refit beats rebuild at low churn
     (``win=True`` in ``derived``; committed in BENCH_4.json).
+
+    ``concurrent=True`` measures the MVCC serving path instead (PR 6,
+    committed in BENCH_6.json): query latency on one engine while a
+    writer thread streams updates through it, against the same engine
+    idle — see :func:`_update_concurrent`.
     """
+    if concurrent:
+        return _update_concurrent(scale, n_queries)
     from repro.dynamic import DynamicEngine, apply_to_points
     from repro.workloads import drifting_users, facility_churn, facility_jitter
 
@@ -572,6 +585,135 @@ def update_throughput(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[
             )
         )
     return rows
+
+
+def _update_concurrent(scale: float, n_queries: int) -> list[dict]:
+    """MVCC serving under concurrent updates (PR 6 tentpole acceptance).
+
+    One :class:`repro.dynamic.DynamicEngine`; a writer thread streams
+    alternating user-drift / facility-jitter batches through
+    ``apply_updates`` while the main thread keeps issuing the standing
+    query batch with no coordination whatsoever — the read path resolves
+    the immutable snapshot once and never takes a lock.  The writer is
+    paced at ~25ms between batches (streaming-ingest cadence): what is
+    under test is that readers are never *blocked* by a writer, not that
+    a writer saturating every core leaves CPU time free.  Reported:
+
+    * idle vs concurrent p50/p99 per-call latency and the acceptance
+      ratio ``within2x`` (concurrent p99 <= 2 x idle p99);
+    * ``versions``: how far the writer advanced while readers ran
+      (proof the measurement actually interleaved);
+    * ``stale_mix``: for each distinct version a concurrent reader
+      reported, its masks are replayed on a cold engine built from the
+      arrays recorded at exactly that version — any half-applied or
+      cross-version mix would miscompare.  Asserted zero.
+    """
+    import threading
+
+    from repro.dynamic import DynamicEngine, UpdateBatch
+
+    F, U = _fu("NY", 400, scale)
+    lo, hi = np.concatenate([F, U]).min(0), np.concatenate([F, U]).max(0)
+    F = np.concatenate(
+        [[[lo[0], lo[1]], [lo[0], hi[1]], [hi[0], lo[1]], [hi[0], hi[1]]], F]
+    )
+    rng = np.random.default_rng(12)
+    q_n = n_queries or 8
+    qs = [int(q) for q in rng.integers(4, len(F), q_n)]
+    k = 10
+    backend = "grid"
+    n_batches = 16
+    dyn = DynamicEngine(F, U, RkNNConfig(backend=backend))
+    dyn.query_batch(qs, k)  # warm jit + caches
+
+    def measure_once():
+        t0 = time.perf_counter()
+        r = dyn.query_batch(qs, k)
+        return time.perf_counter() - t0, int(r.version), r.masks
+
+    history = {dyn.version: (dyn.facilities.copy(), dyn.users.copy())}
+    done = threading.Event()
+    writer_err: list[BaseException] = []
+
+    def writer(n_batches, seed):
+        try:
+            wrng = np.random.default_rng(seed)
+            for step in range(n_batches):
+                if step % 2:  # user drift (5%), clipped inside the rect
+                    ids = wrng.choice(len(dyn.users), size=len(dyn.users) // 20,
+                                      replace=False)
+                    pts = np.clip(
+                        dyn.users[ids] + wrng.normal(0, 0.01, (len(ids), 2)),
+                        lo, hi,
+                    )
+                    batch = UpdateBatch(user_move=(ids, pts))
+                else:  # facility jitter (2%), corners + query ids pinned
+                    cand = np.setdiff1d(np.arange(4, len(dyn.facilities)), qs)
+                    ids = wrng.choice(cand, size=max(len(cand) // 50, 1),
+                                      replace=False)
+                    pts = np.clip(
+                        dyn.facilities[ids]
+                        + wrng.normal(0, 0.005, (len(ids), 2)),
+                        lo, hi,
+                    )
+                    batch = UpdateBatch(facility_move=(ids, pts))
+                dyn.apply_updates(batch)
+                # sole writer: arrays are stable until OUR next apply
+                history[dyn.version] = (
+                    dyn.facilities.copy(), dyn.users.copy()
+                )
+                time.sleep(0.025)  # streaming cadence between deltas
+        except BaseException as e:  # pragma: no cover - failure path
+            writer_err.append(e)
+        finally:
+            done.set()
+
+    def concurrent_round(n_batches, seed, min_reads):
+        lats = []
+        masks_at = {}  # last masks per observed version
+        t = threading.Thread(target=writer, args=(n_batches, seed))
+        t.start()
+        while not done.is_set() or len(lats) < min_reads:
+            dt, version, masks = measure_once()
+            lats.append(dt)
+            masks_at[version] = masks
+        t.join()
+        done.clear()
+        assert not writer_err, writer_err
+        return np.array(lats), masks_at
+
+    # uncounted warm-up round: update-churned scene sizes can outgrow the
+    # monotone pad bucket once, and that one XLA recompile belongs to
+    # warm-up, not to the steady-state serving latency under measurement
+    concurrent_round(4, 3, 8)
+
+    # enough idle samples that idle p99 is a real percentile rather than
+    # the sample max — the concurrent round yields hundreds of reads, and
+    # comparing its p99 against a 40-sample max would bias the ratio
+    idle = np.array([measure_once()[0] for _ in range(200)])
+    conc, masks_at = concurrent_round(n_batches, 7, 40)
+
+    stale_mix = 0
+    for version, masks in sorted(masks_at.items()):
+        cold = RkNNEngine(*history[version], RkNNConfig(backend=backend))
+        if not np.array_equal(masks, cold.query_batch(qs, k).masks):
+            stale_mix += 1
+    assert stale_mix == 0, f"{stale_mix} versions served mixed-state answers"
+
+    p = lambda a, q: float(np.percentile(a, q))  # noqa: E731
+    within2x = p(conc, 99) <= 2.0 * p(idle, 99)
+    return [
+        dict(
+            name=f"update_concurrent_{backend}",
+            us_per_call=float(conc.mean() / q_n * 1e6),
+            derived=(
+                f"idle_p50={p(idle, 50)*1e3:.2f}ms idle_p99={p(idle, 99)*1e3:.2f}ms "
+                f"conc_p50={p(conc, 50)*1e3:.2f}ms conc_p99={p(conc, 99)*1e3:.2f}ms "
+                f"within2x={within2x} versions={dyn.version} "
+                f"reads={len(conc)} checked={len(masks_at)} stale_mix={stale_mix}"
+            ),
+        )
+    ]
 
 
 # ------------------------------------------------- monochromatic (paper §4.5)

@@ -60,6 +60,12 @@ def main() -> None:
         default=None,
         help="backend name forwarded to benches that accept one",
     )
+    ap.add_argument(
+        "--concurrent",
+        action="store_true",
+        help="forwarded to benches that accept it (update_throughput: "
+        "measure MVCC serving latency under a concurrent update stream)",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -72,6 +78,8 @@ def main() -> None:
         kw = {"scale": args.scale}
         if args.backend and "backend" in inspect.signature(fn).parameters:
             kw["backend"] = args.backend
+        if args.concurrent and "concurrent" in inspect.signature(fn).parameters:
+            kw["concurrent"] = True
         try:
             rows = fn(**kw)
         except Exception as e:  # noqa: BLE001 — report and continue

@@ -111,6 +111,12 @@ class QueryRequest:
     facilities: np.ndarray | None = None  # [M, 2] f64
     q_pt: np.ndarray | None = None  # [2]
     exclude: int | None = None
+    #: Optional per-snapshot kernel memo (an ``LruCache``): the engine
+    #: injects its snapshot's store so per-user-set state (the grid-pallas
+    #: cell bucketing) is cached per *version*, not on the backend
+    #: singleton.  ``None`` (raw protocol use) falls back to a small
+    #: instance cache.
+    memo: Any = None
 
 
 @dataclasses.dataclass
@@ -138,6 +144,8 @@ class BatchRequest:
     excludes: list[int | None] | None = None
     mp: int | None = None
     dispatch: Callable | None = None
+    #: Per-snapshot kernel memo — see :attr:`QueryRequest.memo`.
+    memo: Any = None
 
 
 class Backend:
@@ -158,10 +166,24 @@ class Backend:
     #: ``pallas_interpret_default()`` is on; on a real TPU they are
     #: measured like any other backend.  Correctness suites ignore this.
     interpret_mode_on_cpu: ClassVar[bool] = False
+    #: True when :meth:`prepare_batch`'s returned object bakes in user
+    #: *coordinates* (not just scene geometry).  The dynamic engine's
+    #: copy-on-write batch-cache carry consults this: for a user-move-only
+    #: delta, prepared state of backends where this is False stays valid
+    #: (user arrays enter only at :meth:`count_batch` via the request) and
+    #: is carried into the next snapshot; True forces a drop.
+    prepared_carries_users: ClassVar[bool] = False
 
     # ---- filter phase (host) --------------------------------------------
-    def build_index(self, scene: Scene, *, grid_g: int = 64):
-        """Host-side per-scene index build (grid/BVH); ``None`` if unused."""
+    def build_index(self, scene: Scene, *, grid_g: int = 64, memo: dict | None = None):
+        """Host-side per-scene index build (grid/BVH); ``None`` if unused.
+
+        ``memo`` is the engine snapshot's per-scene index store (a plain
+        dict scoped to ``scene``): backends that share one built structure
+        across registry entries (the grid family) memoize it there under
+        their own key, so the snapshot — not the scene object — owns the
+        cached index state.  ``None`` builds fresh.
+        """
         return None
 
     def refit_index(
@@ -318,25 +340,25 @@ class DenseRefBackend(DenseBackend):
 class GridBackend(Backend):
     name = "grid"
 
-    def build_index(self, scene: Scene, *, grid_g: int = 64):
-        # the built grid is memoized on the scene: the grid, grid-pallas,
-        # and grid-pallas-ref backends all build the identical index, so a
-        # scene queried through more than one of them pays one build (the
-        # pallas variants hang their packed planes off the shared object,
-        # keyed by lane pad)
-        store = getattr(scene, "_grid_index_memo", None)
-        if store is None:
-            store = {}
-            object.__setattr__(scene, "_grid_index_memo", store)
-        g = store.get(grid_g)
-        if g is None:
-            g = build_grid(
-                scene.tris[: scene.n_tris],
-                scene.coeffs[: scene.n_tris],
-                scene.rect,
-                G=grid_g,
-            )
-            store[grid_g] = g
+    def build_index(self, scene: Scene, *, grid_g: int = 64, memo: dict | None = None):
+        # the grid, grid-pallas, and grid-pallas-ref backends all build the
+        # identical index, so within one snapshot's per-scene store they
+        # share it under ("grid", G) — a scene queried through more than
+        # one of them pays one build (the pallas variants hang their packed
+        # planes off the shared object, keyed by lane pad)
+        key = ("grid", int(grid_g))
+        if memo is not None:
+            g = memo.get(key)
+            if g is not None:
+                return g
+        g = build_grid(
+            scene.tris[: scene.n_tris],
+            scene.coeffs[: scene.n_tris],
+            scene.rect,
+            G=grid_g,
+        )
+        if memo is not None:
+            memo[key] = g
         return g
 
     def refit_index(
@@ -425,6 +447,9 @@ class GridPallasBackend(GridBackend):
     name = "grid-pallas"
     kernel_backend = "pallas"
     interpret_mode_on_cpu = True
+    # prepare_batch's tuple embeds the cell-sorted user coordinates, so a
+    # user-move delta invalidates it (the COW batch-cache carry drops it)
+    prepared_carries_users = True
     _BUCKET_CACHE_CAP = 4
 
     @property
@@ -436,9 +461,11 @@ class GridPallasBackend(GridBackend):
         return 128 if not _ops.pallas_interpret_default() else 8
 
     def __init__(self) -> None:
-        # bucketing memo: (users identity, rect, G) -> sorted arrays.  The
-        # engine's resident xs/ys arrays are stable objects, so identity is
-        # the cheap key; a weakref guard catches id() reuse after gc.
+        # raw-protocol fallback bucketing memo, used only when the request
+        # carries no snapshot memo: (users identity, rect, G) -> sorted
+        # arrays, with a weakref guard against id() reuse after gc.
+        # Engine-routed requests inject their snapshot's kernel memo
+        # instead (per-version ownership — see core/snapshot.py).
         self._bucket_cache: "collections.OrderedDict[tuple, tuple]" = (
             collections.OrderedDict()
         )
@@ -457,20 +484,31 @@ class GridPallasBackend(GridBackend):
         return planes
 
     # ---- user bucketing (shared across batches over one user set) -------
-    def _buckets_for(self, xs, ys, rect, G: int):
+    def _buckets_for(self, xs, ys, rect, G: int, memo=None):
         """``(xs_s, ys_s, order, ranks, occ, block)`` for one user set.
 
         ``occ`` lists the user-occupied cell ids and ``ranks`` maps each
         user block into that compact axis — the plane/base tables shipped
         to the device carry only occupied cells.
+
+        With a snapshot ``memo`` (engine-routed requests) the bucketing is
+        cached per engine version: the memo pins a strong reference to
+        ``xs`` so the identity key stays valid for the entry's lifetime,
+        and lookups are lock-free.  Without one (raw protocol) a small
+        weakref-guarded instance cache is used.
         """
         n = int(xs.shape[0])
-        key = (id(xs), n, rect, int(G))
-        with self._bucket_lock:
-            hit = self._bucket_cache.get(key)
-            if hit is not None and hit[0]() is xs:
-                self._bucket_cache.move_to_end(key)
+        key = ("gp-buckets", id(xs), n, rect, int(G))
+        if memo is not None:
+            hit = memo.get(key)
+            if hit is not None and hit[0] is xs:
                 return hit[1]
+        else:
+            with self._bucket_lock:
+                hit = self._bucket_cache.get(key)
+                if hit is not None and hit[0]() is xs:
+                    self._bucket_cache.move_to_end(key)
+                    return hit[1]
         xs_np = np.asarray(xs, np.float32)
         ys_np = np.asarray(ys, np.float32)
         xs_s, ys_s, order, cell_map, nb = prepare_cell_buckets(
@@ -480,6 +518,9 @@ class GridPallasBackend(GridBackend):
         occ = np.unique(cell_map)
         ranks = np.searchsorted(occ, cell_map).astype(np.int32)
         buckets = (jnp.asarray(xs_s), jnp.asarray(ys_s), order, ranks, occ, block)
+        if memo is not None:
+            memo.put(key, (xs, buckets))  # strong ref pins id(xs)
+            return buckets
         try:
             ref = weakref.ref(xs)
         except TypeError:  # non-weakref-able array type: pin it instead
@@ -491,8 +532,8 @@ class GridPallasBackend(GridBackend):
         return buckets
 
     # ---- filter phase ----------------------------------------------------
-    def build_index(self, scene: Scene, *, grid_g: int = 64):
-        grid = super().build_index(scene, grid_g=grid_g)
+    def build_index(self, scene: Scene, *, grid_g: int = 64, memo: dict | None = None):
+        grid = super().build_index(scene, grid_g=grid_g, memo=memo)
         self._planes_for(grid)  # pack eagerly: host work belongs to filter
         return grid
 
@@ -538,7 +579,7 @@ class GridPallasBackend(GridBackend):
         if any(g.rect != rect for g in indexes):
             raise ValueError("all grids in a batch must share the domain rect")
         xs_s, ys_s, order, ranks, occ, block = self._buckets_for(
-            req.xs, req.ys, rect, G
+            req.xs, req.ys, rect, G, memo=req.memo
         )
         planes = [self._planes_for(g)[occ] for g in indexes]  # [n_occ, 3, 3, L]
         L = max(p.shape[-1] for p in planes)
@@ -558,7 +599,7 @@ class GridPallasBackend(GridBackend):
         if grid is None:
             grid = self.build_index(req.scene, grid_g=req.grid_g)
         xs_s, ys_s, order, ranks, occ, block = self._buckets_for(
-            req.xs, req.ys, grid.rect, grid.G
+            req.xs, req.ys, grid.rect, grid.G, memo=req.memo
         )
         counts = _ops.grid_count_cells(
             xs_s, ys_s, ranks, grid.base[occ], self._planes_for(grid)[occ],
@@ -597,7 +638,7 @@ class GridPallasRefBackend(GridPallasBackend):
 class BvhBackend(Backend):
     name = "bvh"
 
-    def build_index(self, scene: Scene, *, grid_g: int = 64):
+    def build_index(self, scene: Scene, *, grid_g: int = 64, memo: dict | None = None):
         return build_bvh(scene.tris[: scene.n_tris])
 
     def refit_index(

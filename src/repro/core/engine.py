@@ -53,6 +53,7 @@ from repro.core.geometry import Rect
 from repro.core.hybrid import SceneCache, _q_key
 from repro.core.results import RkNNBatchResult, RkNNResult
 from repro.core.scene import Scene, build_scene
+from repro.core.snapshot import EngineSnapshot
 from repro.planner.models import WorkloadShape
 
 __all__ = ["RkNNConfig", "EngineStats", "RkNNEngine", "serve_shardings"]
@@ -173,98 +174,122 @@ class RkNNEngine:
             config = dataclasses.replace(config, **overrides)
         get_backend(config.backend)  # validate eagerly
         self.config = config
-        self.facilities = np.asarray(facilities, dtype=np.float64)
-        self.users = np.asarray(users, dtype=np.float64)
         self.mesh = mesh
         self.stats = EngineStats()
-        self.scene_cache: SceneCache | None = (
-            SceneCache(capacity=config.scene_cache) if config.scene_cache > 0 else None
+        self._snap = self._make_snapshot(
+            0,
+            np.asarray(facilities, dtype=np.float64),
+            np.asarray(users, dtype=np.float64),
+            rect=rect,
+            explicit_rect=rect is not None,
         )
-        self._fp: int | None = None  # facility fingerprint, computed once
-        self._batch_cache: "collections.OrderedDict[tuple, tuple]" = (
-            collections.OrderedDict()
-        )
-        self._batch_lock = threading.Lock()  # stream() mutates from producer
         self._pad_bucket = max(int(config.pad_scene_to), 1)
-        self._explicit_rect = rect is not None
-        self._rect = rect
-        self._hull: tuple[np.ndarray, np.ndarray] | None = None
-        self._xs = self._ys = None  # lazy device arrays
-        self._mono: "RkNNEngine | None" = None
-        self._is_mono: bool | None = None
+        #: Lock-free read-activity clock: query entry points bump it, the
+        #: dynamic writer samples it to decide whether prewarm should run
+        #: deprioritized.  Races just lose a tick — it is a heuristic, so
+        #: no lock touches the read path.
+        self._read_clock = 0
         self._mesh_steps: dict = {}  # (backend, statics) -> jitted dispatch
-        self._mesh_xs = self._mesh_ys = None
-        self._mesh_n = 0
         self._plan_log: "collections.deque[dict]" = collections.deque(maxlen=128)
         if mesh is not None:
-            self._init_mesh(mesh)
+            self._init_mesh(self._snap, mesh)
+
+    def _make_snapshot(
+        self,
+        version: int,
+        facilities: np.ndarray,
+        users: np.ndarray,
+        *,
+        rect: Rect | None = None,
+        explicit_rect: bool = False,
+        scene_cache: SceneCache | None | str = "new",
+    ) -> EngineSnapshot:
+        """A fresh :class:`EngineSnapshot` sized from the engine config.
+        ``scene_cache="new"`` allocates one (respecting the capacity
+        knob); the COW update path passes its migrated cache instead."""
+        if scene_cache == "new":
+            scene_cache = (
+                SceneCache(capacity=self.config.scene_cache)
+                if self.config.scene_cache > 0
+                else None
+            )
+        return EngineSnapshot(
+            version,
+            facilities,
+            users,
+            rect=rect,
+            explicit_rect=explicit_rect,
+            scene_cache=scene_cache,
+            batch_capacity=self.config.batch_cache,
+        )
 
     # ------------------------------------------------------------------
-    # lazy shared state
+    # snapshot delegation (compat surface; query paths resolve _snap once)
     # ------------------------------------------------------------------
+    @property
+    def facilities(self) -> np.ndarray:
+        return self._snap.facilities
+
+    @property
+    def users(self) -> np.ndarray:
+        return self._snap.users
+
+    @property
+    def scene_cache(self) -> SceneCache | None:
+        return self._snap.scene_cache
+
     @property
     def rect(self) -> Rect:
         """The shared domain rectangle (facilities ∪ users, padded)."""
-        if self._rect is None:
-            self._rect = Rect.from_bounds(*self._hull_bounds())
-        return self._rect
-
-    def _hull_bounds(self) -> tuple[np.ndarray, np.ndarray]:
-        """Unpadded min/max of facilities ∪ users (lazy, cached)."""
-        if self._hull is None:
-            pts = np.concatenate([self.facilities, self.users])
-            self._hull = (pts.min(axis=0), pts.max(axis=0))
-        return self._hull
+        return self._snap.rect
 
     @property
     def xs(self) -> jnp.ndarray:
-        if self._xs is None:
-            self._xs = jnp.asarray(self.users[:, 0], jnp.float32)
-            self._ys = jnp.asarray(self.users[:, 1], jnp.float32)
-        return self._xs
+        return self._snap.xs
 
     @property
     def ys(self) -> jnp.ndarray:
-        self.xs  # noqa: B018 — materializes both
-        return self._ys
+        return self._snap.ys
 
-    def _rect_for(self, q_pts: np.ndarray) -> Rect:
-        """Shared rect, extended only when a query point falls outside the
-        facility∪user hull (keeps one-shot shims bit-compatible with the
-        old per-call ``Rect.from_points(F, q, U)``)."""
-        if self._explicit_rect:
-            return self.rect
-        lo, hi = self._hull_bounds()
-        if np.all(q_pts >= lo) and np.all(q_pts <= hi):
-            return self.rect
-        return Rect.from_points(self.facilities, q_pts, self.users)
+    def _hull_bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        return self._snap.hull_bounds()
 
     def _fingerprint(self) -> int:
-        if self._fp is None:
-            self._fp = SceneCache.fingerprint(self.facilities)
-        return self._fp
+        return self._snap.fingerprint()
+
+    def _rect_for(self, snap: EngineSnapshot, q_pts: np.ndarray) -> Rect:
+        """Snapshot rect, extended only when a query point falls outside
+        the facility∪user hull (keeps one-shot shims bit-compatible with
+        the old per-call ``Rect.from_points(F, q, U)``)."""
+        if snap.explicit_rect:
+            return snap.rect
+        lo, hi = snap.hull_bounds()
+        if np.all(q_pts >= lo) and np.all(q_pts <= hi):
+            return snap.rect
+        return Rect.from_points(snap.facilities, q_pts, snap.users)
 
     # ------------------------------------------------------------------
     # mesh-sharded batch dispatches (absorbed from launch/serve.py)
     # ------------------------------------------------------------------
-    def _init_mesh(self, mesh) -> None:
-        """Upload the (DP-padded) user coordinates once, sharded over the
-        data axes; per-backend jitted dispatches are built lazily."""
+    def _init_mesh(self, snap: EngineSnapshot, mesh) -> None:
+        """Upload the snapshot's (DP-padded) user coordinates, sharded over
+        the data axes; per-backend jitted dispatches are built lazily (the
+        jitted steps are version-independent and stay on the engine)."""
         from repro.distributed.meshctx import dp_axes
 
         dp = dp_axes(mesh)
         user_sh, _scene_sh, _out_sh = serve_shardings(mesh)
-        xs = self.users[:, 0].astype(np.float32)
-        ys = self.users[:, 1].astype(np.float32)
+        xs = snap.users[:, 0].astype(np.float32)
+        ys = snap.users[:, 1].astype(np.float32)
         n = len(xs)
         dpn = int(np.prod([mesh.shape[a] for a in dp]))
         padn = (-n) % dpn
         if padn:  # sentinel users far outside every scene; sliced off below
             xs = np.concatenate([xs, np.full(padn, 2e9, np.float32)])
             ys = np.concatenate([ys, np.full(padn, 2e9, np.float32)])
-        self._mesh_xs = jax.device_put(xs, user_sh)
-        self._mesh_ys = jax.device_put(ys, user_sh)
-        self._mesh_n = n
+        snap.mesh_xs = jax.device_put(xs, user_sh)
+        snap.mesh_ys = jax.device_put(ys, user_sh)
+        snap.mesh_n = n
 
     def _mesh_q_sharding(self, ndim: int):
         """NamedSharding for a per-query stacked array: queries over
@@ -273,21 +298,26 @@ class RkNNEngine:
 
         return NamedSharding(self.mesh, P("model", *([None] * (ndim - 1))))
 
-    def _mesh_dispatch_for(self, backend: Backend, *, rect: Rect, k: int):
+    def _mesh_dispatch_for(
+        self, snap: EngineSnapshot, backend: Backend, *, rect: Rect, k: int
+    ):
         """Engine-held device-dispatch override for ``count_batch``.
 
         The dense-ref, grid, and bvh batched paths all shard the same way
         (users over the data axes, queries over ``'model'``; the per-query
         stacked index state is tiny).  The jitted step is cached per
         backend and per the statics its math closes over — the domain rect
-        and G for the grid, ``k`` for the bvh early exit.  ``dense``
-        (interpret-mode Pallas) and ``brute`` stay single-device.
+        and G for the grid, ``k`` for the bvh early exit — while the
+        returned dispatch closure captures the *snapshot's* sharded user
+        arrays, so steps survive updates and only the cheap closure is
+        rebuilt per version.  ``dense`` (interpret-mode Pallas) and
+        ``brute`` stay single-device.
         Returns ``dispatch(prepared) -> [Q, N] np.int32`` or ``None``.
         """
-        if self.mesh is None:
+        if self.mesh is None or snap.mesh_xs is None:
             return None
         user_sh, _scene_sh, out_sh = serve_shardings(self.mesh)
-        mesh_xs, mesh_ys, n = self._mesh_xs, self._mesh_ys, self._mesh_n
+        mesh_xs, mesh_ys, n = snap.mesh_xs, snap.mesh_ys, snap.mesh_n
 
         if backend.name == "dense-ref":
             key = ("dense-ref",)
@@ -308,16 +338,20 @@ class RkNNEngine:
         if backend.name == "grid":
             from repro.core.grid import grid_hit_counts_batch_jnp
 
-            # the grid math closes over the domain rect; only the engine's
-            # shared rect gets a cached sharded step.  A transient rect
-            # (out-of-hull point query) would mean one XLA compile per
-            # batch and an ever-growing step cache — fall back to the
-            # single-device dispatch for those instead.
-            if rect != self.rect:
+            # the grid math closes over the domain rect; only the
+            # snapshot's shared rect gets a cached sharded step.  A
+            # transient rect (out-of-hull point query) would mean one XLA
+            # compile per batch and an ever-growing step cache — fall back
+            # to the single-device dispatch for those instead.  The rect
+            # participates in the key (updates can move the hull), capped
+            # like the bvh k-cache below.
+            if rect != snap.rect:
                 return None
-            key = ("grid", self.config.grid_g)
+            key = ("grid", self.config.grid_g, rect)
             step = self._mesh_steps.get(key)
             if step is None:
+                if sum(1 for kk in self._mesh_steps if kk[0] == "grid") >= 16:
+                    return None  # pathological rect churn: stop compiling
                 G = self.config.grid_g
 
                 def _grid_fn(xs, ys, base, lists, coeffs, rect=rect, G=G):
@@ -377,66 +411,68 @@ class RkNNEngine:
     # ------------------------------------------------------------------
     # filter phase helpers (host)
     # ------------------------------------------------------------------
-    def _build_scene(self, q, k: int, rect: Rect, *, pad_to: int | None = None):
-        if self.scene_cache is not None and pad_to is None:
-            scene, _hit = self.scene_cache.get_or_build(
-                self.facilities,
+    def _build_scene(
+        self, snap: EngineSnapshot, q, k: int, rect: Rect, *, pad_to: int | None = None
+    ):
+        if snap.scene_cache is not None and pad_to is None:
+            scene, _hit = snap.scene_cache.get_or_build(
+                snap.facilities,
                 q,
                 k,
                 rect,
-                fp=self._fingerprint(),
+                fp=snap.fingerprint(),
                 strategy=self.config.strategy,
                 grid=self.config.prune_grid,
-                users_hint=self.users,
+                users_hint=snap.users,
             )
             return scene
         return build_scene(
-            self.facilities,
+            snap.facilities,
             q,
             k,
             rect,
             strategy=self.config.strategy,
             grid=self.config.prune_grid,
             pad_to=pad_to,
-            users_hint=self.users,
+            users_hint=snap.users,
         )
 
-    def _index_for(self, backend: Backend, scene: Scene) -> Any:
-        """Per-scene index, memoized on the scene object so cached scenes
-        carry their grid/BVH across repeated queries."""
-        store = getattr(scene, "_engine_indexes", None)
-        if store is None:
-            store = {}
-            object.__setattr__(scene, "_engine_indexes", store)
+    def _index_for(self, snap: EngineSnapshot, backend: Backend, scene: Scene) -> Any:
+        """Per-scene index from the snapshot's memo, so cached scenes carry
+        their grid/BVH across repeated queries (and across updates, via
+        the COW migration)."""
+        store = snap.index_memo.store_for(scene)
         key = (backend.name, self.config.grid_g)
         if key not in store:
-            store[key] = backend.build_index(scene, grid_g=self.config.grid_g)
+            # the backend's own build memo shares the store: grid and
+            # grid-pallas dedupe their underlying grid build through it
+            store[key] = backend.build_index(
+                scene, grid_g=self.config.grid_g, memo=store
+            )
         return store[key]
 
-    def _batch_cache_get(self, key):
-        """LRU lookup (None key → miss); counts a hit in the stats."""
+    def _batch_cache_get(self, snap: EngineSnapshot, key):
+        """Prepared-batch lookup (None key → miss); counts a hit in the
+        stats.  Lock-free — see :class:`~repro.core.snapshot.LruCache`."""
         if key is None:
             return None
-        with self._batch_lock:
-            hit = self._batch_cache.get(key)
-            if hit is not None:
-                self._batch_cache.move_to_end(key)
-                self.stats.batch_cache_hits += 1
-            return hit
+        hit = snap.batch_cache.get(key)
+        if hit is not None:
+            self.stats.batch_cache_hits += 1
+        return hit
 
-    def _batch_cache_put(self, key, value) -> None:
+    def _batch_cache_put(self, snap: EngineSnapshot, key, value) -> None:
         if key is None:
             return
-        with self._batch_lock:
-            self._batch_cache[key] = value
-            if len(self._batch_cache) > self.config.batch_cache:
-                self._batch_cache.popitem(last=False)
+        snap.batch_cache.put(key, value)
 
-    def _build_scenes(self, queries: list, k: int, rect: Rect, workers: int):
+    def _build_scenes(
+        self, snap: EngineSnapshot, queries: list, k: int, rect: Rect, workers: int
+    ):
         """Cache-aware host scene builds, optionally thread-pooled."""
 
         def one(q):
-            return self._build_scene(q, k, rect)
+            return self._build_scene(snap, q, k, rect)
 
         if workers > 0 and len(queries) > 1:
             with concurrent.futures.ThreadPoolExecutor(workers) as pool:
@@ -447,12 +483,15 @@ class RkNNEngine:
         if self.config.pad_to is not None:
             return self.config.pad_to
         mmax = max(s.tris.shape[0] for s in scenes)
-        with self._batch_lock:
-            self._pad_bucket = max(self._pad_bucket, _next_pow2(mmax))
-            return self._pad_bucket
+        # lock-free monotone max: concurrent batches may briefly lose an
+        # update, costing at most one extra retrace — never a wrong pad
+        bucket = max(self._pad_bucket, _next_pow2(mmax))
+        self._pad_bucket = bucket
+        return bucket
 
     def _filter_batch(
         self,
+        snap: EngineSnapshot,
         backend: Backend,
         queries: list,
         q_pts: np.ndarray,
@@ -472,44 +511,45 @@ class RkNNEngine:
                 tuple(_q_key(q) for q in queries),
                 rect,
             )
-            hit = self._batch_cache_get(cache_key)
+            hit = self._batch_cache_get(snap, cache_key)
             if hit is not None:
                 req, prepared, scenes = hit
                 return req, prepared, scenes
 
-        scenes = self._build_scenes(queries, k, rect, scene_workers)
-        dispatch = self._mesh_dispatch_for(backend, rect=rect, k=k)
+        scenes = self._build_scenes(snap, queries, k, rect, scene_workers)
+        dispatch = self._mesh_dispatch_for(snap, backend, rect=rect, k=k)
         # the mesh dispatch closes over its own sharded user arrays — don't
         # materialize a second, replicated device copy it would never read
         req = BatchRequest(
-            xs=None if dispatch is not None else self.xs,
-            ys=None if dispatch is not None else self.ys,
+            xs=None if dispatch is not None else snap.xs,
+            ys=None if dispatch is not None else snap.ys,
             k=k,
             rect=rect,
             grid_g=self.config.grid_g,
             scenes=scenes,
             # per-scene index memo: scene-cache hits reuse their grid/BVH
             # instead of rebuilding it on every new batch composition
-            indexes=[self._index_for(backend, s) for s in scenes],
-            users=self.users,
-            facilities=self.facilities,
+            indexes=[self._index_for(snap, backend, s) for s in scenes],
+            users=snap.users,
+            facilities=snap.facilities,
             q_pts=q_pts,
             excludes=excludes,
             mp=self._mp_bucket(scenes),
             dispatch=dispatch,
+            memo=snap.kernel_memo,
         )
         prepared = backend.prepare_batch(req)
-        self._batch_cache_put(cache_key, (req, prepared, scenes))
+        self._batch_cache_put(snap, cache_key, (req, prepared, scenes))
         return req, prepared, scenes
 
     # ------------------------------------------------------------------
     # planner (the "auto" meta-backend)
     # ------------------------------------------------------------------
-    def _scene_cached(self, q, k: int, rect: Rect) -> bool:
-        if self.scene_cache is None:
+    def _scene_cached(self, snap: EngineSnapshot, q, k: int, rect: Rect) -> bool:
+        if snap.scene_cache is None:
             return False
-        return self.scene_cache.contains(
-            self.facilities, q, k, rect, fp=self._fingerprint()
+        return snap.scene_cache.contains(
+            snap.facilities, q, k, rect, fp=snap.fingerprint()
         )
 
     def _record_plan(self, planner, plan: dict, observed_s: float) -> None:
@@ -532,7 +572,7 @@ class RkNNEngine:
         dispatch ran — observed cost."""
         return list(self._plan_log)
 
-    def _plan_amortized(self) -> bool:
+    def _plan_amortized(self, snap: EngineSnapshot) -> bool:
         """Whether the planner prices geometric backends at steady-state
         (verify-only) cost.  True on engines with a scene cache: they are
         long-lived serving objects, so a scene build is an *investment*
@@ -541,18 +581,21 @@ class RkNNEngine:
         for exactly one cold call.  One-shot shims disable the cache and
         get the strict per-call comparison.
         """
-        return self.scene_cache is not None
+        return snap.scene_cache is not None
 
-    def _plan_single(self, planner, q_build, k: int, q_pt: np.ndarray):
+    def _plan_single(
+        self, snap: EngineSnapshot, planner, q_build, k: int, q_pt: np.ndarray
+    ):
         """Pre-scene routing of one query.  Returns (backend, plan)."""
-        rect = self._rect_for(q_pt[None])
-        amortized = self._plan_amortized()
+        rect = self._rect_for(snap, q_pt[None])
+        amortized = self._plan_amortized(snap)
         shape = WorkloadShape(
-            len(self.facilities),
-            len(self.users),
+            len(snap.facilities),
+            len(snap.users),
             k,
             1,
-            cache_hit=amortized or self._scene_cached(q_build, k, rect),
+            cache_hit=amortized or self._scene_cached(snap, q_build, k, rect),
+            pad_waste=snap.pad_waste(rect, self.config.grid_g),
         )
         choice, pred, costs = planner.select(shape)
         plan = {
@@ -577,11 +620,17 @@ class RkNNEngine:
         phase entirely); the result's ``backend`` field reports the
         concrete choice and :meth:`explain` the full plan.
         """
+        self._read_clock += 1
+        return self._query(self._snap, q, k, backend=backend)
+
+    def _query(
+        self, snap: EngineSnapshot, q, k: int, *, backend: str | None = None
+    ) -> RkNNResult:
         b = get_backend(backend or self.config.backend)
         arr = np.asarray(q)
         if arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer):
             q_build: int | np.ndarray = int(arr)
-            q_pt, exclude = self.facilities[int(arr)], int(arr)
+            q_pt, exclude = snap.facilities[int(arr)], int(arr)
         else:
             q_pt = np.asarray(q, np.float64).reshape(2)
             q_build, exclude = q_pt, None
@@ -589,7 +638,7 @@ class RkNNEngine:
         plan = planner = None
         if b.is_meta:
             planner = b
-            b, plan = self._plan_single(planner, q_build, k, q_pt)
+            b, plan = self._plan_single(snap, planner, q_build, k, q_pt)
 
         if not b.uses_scene:
             # geometry-free: never materialize the device user arrays
@@ -599,8 +648,8 @@ class RkNNEngine:
                     xs=None,
                     ys=None,
                     k=k,
-                    users=self.users,
-                    facilities=self.facilities,
+                    users=snap.users,
+                    facilities=snap.facilities,
                     q_pt=q_pt,
                     exclude=exclude,
                 )
@@ -610,21 +659,24 @@ class RkNNEngine:
             self.stats.t_verify_s += t1 - t0
             if plan is not None:
                 self._record_plan(planner, plan, t1 - t0)
-            return RkNNResult(counts < k, counts, None, 0.0, t1 - t0, b.name)
+            return RkNNResult(
+                counts < k, counts, None, 0.0, t1 - t0, b.name, snap.version
+            )
 
         t0 = time.perf_counter()
-        rect = self._rect_for(q_pt[None])
-        scene = self._build_scene(q_build, k, rect, pad_to=self.config.pad_to)
-        index = self._index_for(b, scene)
+        rect = self._rect_for(snap, q_pt[None])
+        scene = self._build_scene(snap, q_build, k, rect, pad_to=self.config.pad_to)
+        index = self._index_for(snap, b, scene)
         t1 = time.perf_counter()
         counts = b.count(
             QueryRequest(
-                xs=self.xs,
-                ys=self.ys,
+                xs=snap.xs,
+                ys=snap.ys,
                 k=k,
                 grid_g=self.config.grid_g,
                 scene=scene,
                 index=index,
+                memo=snap.kernel_memo,
             )
         )
         t2 = time.perf_counter()
@@ -634,7 +686,9 @@ class RkNNEngine:
         self.stats.m_max = max(self.stats.m_max, scene.n_tris)
         if plan is not None:
             self._record_plan(planner, plan, t2 - t0)
-        return RkNNResult(counts < k, counts, scene, t1 - t0, t2 - t1, b.name)
+        return RkNNResult(
+            counts < k, counts, scene, t1 - t0, t2 - t1, b.name, snap.version
+        )
 
     def query_batch(
         self,
@@ -651,12 +705,26 @@ class RkNNEngine:
         to looping :meth:`query` per query (equivalence-tested across all
         backends).
         """
+        self._read_clock += 1
+        return self._query_batch(
+            self._snap, qs, k, backend=backend, scene_workers=scene_workers
+        )
+
+    def _query_batch(
+        self,
+        snap: EngineSnapshot,
+        qs,
+        k: int,
+        *,
+        backend: str | None = None,
+        scene_workers: int | None = None,
+    ) -> RkNNBatchResult:
         b = get_backend(backend or self.config.backend)
         workers = (
             self.config.scene_workers if scene_workers is None else scene_workers
         )
         qs = list(qs)
-        n_users = len(self.users)
+        n_users = len(snap.users)
         if not qs:
             return RkNNBatchResult(
                 masks=np.zeros((0, n_users), bool),
@@ -666,10 +734,11 @@ class RkNNEngine:
                 t_verify_s=0.0,
                 backend=b.name,
                 k=k,
+                version=snap.version,
             )
         if b.is_meta:
-            return self._query_batch_planner(b, qs, k, workers)
-        queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
+            return self._query_batch_planner(snap, b, qs, k, workers)
+        queries, q_pts, excludes = _normalize_queries(snap.facilities, qs)
 
         if not b.uses_scene:
             t0 = time.perf_counter()
@@ -678,8 +747,8 @@ class RkNNEngine:
                     xs=None,
                     ys=None,
                     k=k,
-                    users=self.users,
-                    facilities=self.facilities,
+                    users=snap.users,
+                    facilities=snap.facilities,
                     q_pts=q_pts,
                     excludes=excludes,
                 ),
@@ -689,12 +758,14 @@ class RkNNEngine:
             self.stats.n_queries += len(qs)
             self.stats.n_batches += 1
             self.stats.t_verify_s += t1 - t0
-            return RkNNBatchResult(counts < k, counts, None, 0.0, t1 - t0, b.name, k)
+            return RkNNBatchResult(
+                counts < k, counts, None, 0.0, t1 - t0, b.name, k, snap.version
+            )
 
         t0 = time.perf_counter()
-        rect = self._rect_for(q_pts)
+        rect = self._rect_for(snap, q_pts)
         req, prepared, scenes = self._filter_batch(
-            b, queries, q_pts, excludes, k, rect, workers
+            snap, b, queries, q_pts, excludes, k, rect, workers
         )
         t1 = time.perf_counter()
         counts = b.count_batch(req, prepared)
@@ -704,10 +775,13 @@ class RkNNEngine:
         self.stats.t_filter_s += t1 - t0
         self.stats.t_verify_s += t2 - t1
         self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
-        return RkNNBatchResult(counts < k, counts, scenes, t1 - t0, t2 - t1, b.name, k)
+        return RkNNBatchResult(
+            counts < k, counts, scenes, t1 - t0, t2 - t1, b.name, k, snap.version
+        )
 
     def _dispatch_group(
         self,
+        snap: EngineSnapshot,
         b: Backend,
         idxs: list[int],
         scenes: list[Scene] | None,
@@ -728,8 +802,8 @@ class RkNNEngine:
                 xs=None,
                 ys=None,
                 k=k,
-                users=self.users,
-                facilities=self.facilities,
+                users=snap.users,
+                facilities=snap.facilities,
                 q_pts=q_pts[idxs],
                 excludes=[excludes[i] for i in idxs],
             )
@@ -747,7 +821,7 @@ class RkNNEngine:
                     tuple((_q_key(q_pts[i]), excludes[i]) for i in idxs),
                     rect,
                 )
-                hit = self._batch_cache_get(cache_key)
+                hit = self._batch_cache_get(snap, cache_key)
                 if hit is not None:
                     req, prepared, _sub = hit
                     t1 = time.perf_counter()
@@ -755,31 +829,32 @@ class RkNNEngine:
                     t2 = time.perf_counter()
                     return np.asarray(counts), t1 - t0, t2 - t1
             sub = [scenes[i] for i in idxs]
-            dispatch = self._mesh_dispatch_for(b, rect=rect, k=k)
+            dispatch = self._mesh_dispatch_for(snap, b, rect=rect, k=k)
             req = BatchRequest(
-                xs=None if dispatch is not None else self.xs,
-                ys=None if dispatch is not None else self.ys,
+                xs=None if dispatch is not None else snap.xs,
+                ys=None if dispatch is not None else snap.ys,
                 k=k,
                 rect=rect,
                 grid_g=self.config.grid_g,
                 scenes=sub,
-                indexes=[self._index_for(b, s) for s in sub],
-                users=self.users,
-                facilities=self.facilities,
+                indexes=[self._index_for(snap, b, s) for s in sub],
+                users=snap.users,
+                facilities=snap.facilities,
                 q_pts=q_pts[idxs],
                 excludes=[excludes[i] for i in idxs],
                 mp=self._mp_bucket(sub),
                 dispatch=dispatch,
+                memo=snap.kernel_memo,
             )
             prepared = b.prepare_batch(req)
-            self._batch_cache_put(cache_key, (req, prepared, sub))
+            self._batch_cache_put(snap, cache_key, (req, prepared, sub))
         t1 = time.perf_counter()
         counts = b.count_batch(req, prepared)
         t2 = time.perf_counter()
         return np.asarray(counts), t1 - t0, t2 - t1
 
     def _query_batch_planner(
-        self, planner, qs: list, k: int, workers: int
+        self, snap: EngineSnapshot, planner, qs: list, k: int, workers: int
     ) -> RkNNBatchResult:
         """The ``auto`` batched path: price, (maybe) filter, split, recombine.
 
@@ -799,10 +874,11 @@ class RkNNEngine:
         LRU: a repeated workload goes straight to its group dispatches
         (which hit their own prepared-group LRU) without re-planning.
         """
-        queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
-        n_f, n_u, q_n = len(self.facilities), len(self.users), len(qs)
+        queries, q_pts, excludes = _normalize_queries(snap.facilities, qs)
+        n_f, n_u, q_n = len(snap.facilities), len(snap.users), len(qs)
         t0 = time.perf_counter()
-        rect = self._rect_for(q_pts)
+        rect = self._rect_for(snap, q_pts)
+        pad_w = snap.pad_waste(rect, self.config.grid_g)
 
         plan_key = cached_decision = None
         if self.config.batch_cache > 0:
@@ -817,7 +893,7 @@ class RkNNEngine:
                 tuple(_q_key(q) for q in queries),
                 rect,
             )
-            cached_decision = self._batch_cache_get(plan_key)
+            cached_decision = self._batch_cache_get(snap, plan_key)
 
         if cached_decision is not None:
             per_q, groups, scenes = cached_decision
@@ -833,10 +909,12 @@ class RkNNEngine:
             # phase is already amortized (scenes cached) — or *will* be (see
             # _plan_amortized: a cache-carrying engine invests in scene
             # builds because every repeat of a hot query rides them for free)
-            amortized = self._plan_amortized() or all(
-                self._scene_cached(q, k, rect) for q in queries
+            amortized = self._plan_amortized(snap) or all(
+                self._scene_cached(snap, q, k, rect) for q in queries
             )
-            batch_shape = WorkloadShape(n_f, n_u, k, q_n, cache_hit=amortized)
+            batch_shape = WorkloadShape(
+                n_f, n_u, k, q_n, cache_hit=amortized, pad_waste=pad_w
+            )
             ranked = planner.rank(batch_shape)
             plan = {
                 "mode": "batch",
@@ -853,26 +931,34 @@ class RkNNEngine:
                 groups = {name: list(range(q_n))}
                 scenes = None
             else:
-                scenes = self._build_scenes(queries, k, rect, workers)
+                scenes = self._build_scenes(snap, queries, k, rect, workers)
                 # re-price per query with the actual scene size; the filter
                 # cost is sunk now
                 per_q = planner.assign_batch(
                     [
-                        WorkloadShape(n_f, n_u, k, 1, m_tris=s.n_tris, cache_hit=True)
+                        WorkloadShape(
+                            n_f,
+                            n_u,
+                            k,
+                            1,
+                            m_tris=s.n_tris,
+                            cache_hit=True,
+                            pad_waste=pad_w,
+                        )
                         for s in scenes
                     ]
                 )
                 groups = {}
                 for i, (name, _cost) in enumerate(per_q):
                     groups.setdefault(name, []).append(i)
-            self._batch_cache_put(plan_key, (per_q, groups, scenes))
+            self._batch_cache_put(snap, plan_key, (per_q, groups, scenes))
 
         counts = np.zeros((q_n, n_u), np.int32)
         t_count_total = 0.0
         observed_group: dict[str, float] = {}
         for name, idxs in groups.items():
             gcounts, t_prep, t_count = self._dispatch_group(
-                get_backend(name), idxs, scenes, q_pts, excludes, k, rect
+                snap, get_backend(name), idxs, scenes, q_pts, excludes, k, rect
             )
             counts[idxs] = gcounts
             t_count_total += t_count
@@ -898,7 +984,14 @@ class RkNNEngine:
             )
         self._record_plan(planner, plan, t_end - t0)
         return RkNNBatchResult(
-            counts < k, counts, scenes, t_filter, t_count_total, "auto", k
+            counts < k,
+            counts,
+            scenes,
+            t_filter,
+            t_count_total,
+            "auto",
+            k,
+            snap.version,
         )
 
     def query_mono(self, q_idx: int, k: int, *, backend: str | None = None) -> RkNNResult:
@@ -908,25 +1001,30 @@ class RkNNEngine:
         threshold ``k + 1`` (every point's ray hits its own occluder), then
         self-hit-corrects the counts — see docs/API.md for the derivation.
         """
-        if self._is_mono is None:
-            self._is_mono = self.users is self.facilities or (
-                self.users.shape == self.facilities.shape
-                and np.array_equal(self.users, self.facilities)
+        self._read_clock += 1
+        snap = self._snap
+        if snap._is_mono is None:
+            snap._is_mono = snap.users is snap.facilities or (
+                snap.users.shape == snap.facilities.shape
+                and np.array_equal(snap.users, snap.facilities)
             )
-        eng = self
-        if not self._is_mono:
-            if self._mono is None:
+        if snap._is_mono:
+            res = self._query(snap, int(q_idx), k + 1, backend=backend)
+        else:
+            if snap._mono is None:
                 # mesh is deliberately not forwarded: the single-query path
-                # never routes through the sharded batch dispatch
-                self._mono = RkNNEngine(
-                    self.facilities,
-                    self.facilities,
+                # never routes through the sharded batch dispatch.  The
+                # sub-engine is pinned to this snapshot's facilities, so it
+                # rides the snapshot (benign first-touch race: two racing
+                # builders produce equal engines, last assignment wins).
+                snap._mono = RkNNEngine(
+                    snap.facilities,
+                    snap.facilities,
                     self.config,
-                    rect=self._rect if self._explicit_rect else None,
+                    rect=snap._rect if snap.explicit_rect else None,
                 )
-            eng = self._mono
-        res = eng.query(int(q_idx), k + 1, backend=backend)
-        if eng is not self:  # mirror the sub-engine's work into our stats
+            res = snap._mono.query(int(q_idx), k + 1, backend=backend)
+            # mirror the sub-engine's work into our stats
             self.stats.n_queries += 1
             self.stats.t_filter_s += res.t_filter_s
             self.stats.t_verify_s += res.t_verify_s
@@ -939,7 +1037,13 @@ class RkNNEngine:
         mask = counts < k
         mask[q_idx] = False
         return RkNNResult(
-            mask, counts, res.scene, res.t_filter_s, res.t_verify_s, res.backend
+            mask,
+            counts,
+            res.scene,
+            res.t_filter_s,
+            res.t_verify_s,
+            res.backend,
+            snap.version,
         )
 
     def stream(self, batches, k: int, *, backend: str | None = None):
@@ -960,17 +1064,26 @@ class RkNNEngine:
         def producer():
             try:
                 for batch in batches:
+                    # one snapshot per batch: each yielded mask set is a
+                    # consistent view of exactly one version, and a stream
+                    # naturally picks up concurrent updates batch to batch
+                    snap = self._snap
                     qs = list(batch)
                     t0 = time.perf_counter()
-                    queries, q_pts, excludes = _normalize_queries(self.facilities, qs)
+                    queries, q_pts, excludes = _normalize_queries(
+                        snap.facilities, qs
+                    )
                     b_eff, plan = b, None
                     if b.is_meta:
                         shape = WorkloadShape(
-                            len(self.facilities),
-                            len(self.users),
+                            len(snap.facilities),
+                            len(snap.users),
                             k,
                             len(qs),
-                            cache_hit=self._plan_amortized(),
+                            cache_hit=self._plan_amortized(snap),
+                            pad_waste=snap.pad_waste(
+                                snap.rect, self.config.grid_g
+                            ),
                         )
                         choice, pred, costs = b.select(shape)
                         plan = {
@@ -983,9 +1096,9 @@ class RkNNEngine:
                         }
                         b_eff = get_backend(choice)
                     if b_eff.uses_scene:
-                        rect = self._rect_for(q_pts)
+                        rect = self._rect_for(snap, q_pts)
                         built = self._filter_batch(
-                            b_eff, queries, q_pts, excludes, k, rect,
+                            snap, b_eff, queries, q_pts, excludes, k, rect,
                             self.config.scene_workers,
                         )
                     else:
@@ -993,8 +1106,8 @@ class RkNNEngine:
                             xs=None,
                             ys=None,
                             k=k,
-                            users=self.users,
-                            facilities=self.facilities,
+                            users=snap.users,
+                            facilities=snap.facilities,
                             q_pts=q_pts,
                             excludes=excludes,
                         )

@@ -24,8 +24,11 @@ the dense count in ``tests/test_core_rknn.py``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
+import time
 
 import numpy as np
 
@@ -39,9 +42,48 @@ __all__ = [
     "build_grid",
     "refit_grid",
     "grid_hit_counts_jnp",
+    "shape_bucket",
     "stack_grids",
     "grid_hit_counts_batch_jnp",
+    "build_throttle",
 ]
+
+#: Per-thread cooperative deprioritization for heavy index builds.  A
+#: background maintenance thread (the MVCC writer prewarming scenes) sets
+#: a positive ratio; the classify chunk loop then sleeps ``ratio x`` the
+#: time each chunk of C-level work took, handing the GIL to foreground
+#: query threads.  Foreground builds leave it at 0 and pay nothing.
+_build_priority = threading.local()
+
+
+def build_yield_ratio() -> float:
+    """Current thread's cooperative-yield ratio (0.0 = foreground).
+
+    Re-sampled inside the hot loops (per chunk / per iteration), so a
+    callable ratio can engage or release mid-build as contention changes.
+    """
+    v = getattr(_build_priority, "yield_ratio", 0.0)
+    return float(v()) if callable(v) else v
+
+
+@contextlib.contextmanager
+def build_throttle(ratio):
+    """Make grid builds on THIS thread yield ``ratio x`` their CPU time.
+
+    ``ratio=2.0`` caps the building thread at ~1/3 of a contended core, so
+    concurrent readers keep ~2/3 instead of the fair-scheduling half — the
+    single-core analogue of running index maintenance at low priority.
+
+    ``ratio`` may be a zero-arg callable returning the current ratio —
+    the MVCC writer passes one that flips from 0 to 2.0 the moment a
+    concurrent reader is observed, so an uncontended engine never sleeps.
+    """
+    prev = getattr(_build_priority, "yield_ratio", 0.0)
+    _build_priority.yield_ratio = ratio if callable(ratio) else float(ratio)
+    try:
+        yield
+    finally:
+        _build_priority.yield_ratio = prev
 
 
 @dataclasses.dataclass
@@ -68,71 +110,106 @@ class OccluderGrid:
         return float((self.lists >= 0).sum() / max(len(self.lists), 1))
 
 
+def _tri_cell_classify_many(
+    tris: np.ndarray, coeffs: np.ndarray, rect: Rect, G: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized cell classification for ALL triangles in one pass.
+
+    Expands each triangle's clamped-AABB cell range into flat
+    (triangle, cell) candidate pairs and runs the SAT + full-containment
+    tests over every pair at once — this is the index build's hot loop,
+    and the per-triangle Python iteration it replaces dominated the
+    dynamic writer's CPU share (scene prewarm rebuilds indexes inline).
+
+    Separating axes = 2 box axes + 3 edge normals (closed-set test); full
+    containment = all 4 cell corners pass all 3 inclusive edge tests.
+    Cells are EXPANDED by a float-rounding guard when classifying: a user
+    whose f32 cell assignment lands one ulp across a boundary must still
+    see correct counts, so "fully covers the cell" is certified on the
+    slightly larger box (near-boundary triangles demote to the partial
+    list, where they are tested exactly).
+
+    Returns ``(tri_idx [P], cell [P], full [P] bool, partial [P] bool)``.
+    """
+    M = len(tris)
+    w = rect.width / G
+    h = rect.height / G
+    eps = 1e-5 * max(w, h)
+    lo = tris.min(axis=1)  # [M, 2]
+    hi = tris.max(axis=1)
+    ix0 = np.clip(np.floor((lo[:, 0] - eps - rect.xmin) / w), 0, G - 1).astype(np.int64)
+    ix1 = np.clip(np.floor((hi[:, 0] + eps - rect.xmin) / w - 1e-12), 0, G - 1).astype(np.int64)
+    iy0 = np.clip(np.floor((lo[:, 1] - eps - rect.ymin) / h), 0, G - 1).astype(np.int64)
+    iy1 = np.clip(np.floor((hi[:, 1] + eps - rect.ymin) / h - 1e-12), 0, G - 1).astype(np.int64)
+    outside = (
+        (hi[:, 0] < rect.xmin) | (lo[:, 0] > rect.xmax)
+        | (hi[:, 1] < rect.ymin) | (lo[:, 1] > rect.ymax)
+    )
+    ny = iy1 - iy0 + 1
+    counts = np.where(outside, 0, (ix1 - ix0 + 1) * ny)  # pairs per triangle
+    tri_idx = np.repeat(np.arange(M), counts)  # [P]
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    local = np.arange(int(counts.sum())) - np.repeat(starts, counts)
+    ny_r = ny[tri_idx]
+    gx = ix0[tri_idx] + local // ny_r
+    gy = iy0[tri_idx] + local % ny_r
+
+    # Each edge function e(x, y) = a*x + b*y + c is affine, so its extrema
+    # over the expanded cell's corners are exactly
+    #     e(center) -/+ (|a| * hw + |b| * hh)
+    # (hw/hh = expanded half-extents): the full-containment test is
+    # min >= 0 on every edge, the SAT edge test is max >= 0 on every edge.
+    # This prices 3 evaluations per pair instead of 12 corner ones, and the
+    # per-triangle spread term is hoisted out of the pair loop entirely.
+    hw = w / 2 + eps
+    hh = h / 2 + eps
+    spread_t = np.abs(coeffs[:, :, 0]) * hw + np.abs(coeffs[:, :, 1]) * hh  # [M, 3]
+
+    # Chunked evaluation: bisector-strip triangles have AABBs spanning
+    # thousands of cells, so P can reach millions — one monolithic ufunc
+    # over that holds the GIL for ~100ms, which is exactly the latency
+    # spike an MVCC *reader* thread would see while the writer prewarms
+    # scenes.  Small chunks keep every C-level op a few ms.
+    P = len(tri_idx)
+    full = np.empty(P, bool)
+    partial = np.empty(P, bool)
+    chunk = 1 << 18
+    for s in range(0, max(P, 1), chunk):
+        yield_ratio = build_yield_ratio()  # per chunk: ratio may be dynamic
+        t_chunk = time.perf_counter() if yield_ratio else 0.0
+        sl = slice(s, min(s + chunk, P))
+        ti = tri_idx[sl]
+        cx = rect.xmin + (gx[sl] + 0.5) * w  # cell centers  [C]
+        cy = rect.ymin + (gy[sl] + 0.5) * h
+        co = coeffs[ti]  # [C, 3, 3]
+        e_c = co[:, :, 0] * cx[:, None] + co[:, :, 1] * cy[:, None] + co[:, :, 2]
+        sp = spread_t[ti]
+        f = np.all(e_c - sp >= 0.0, axis=-1)  # every corner inside every edge
+        ov = np.all(e_c + sp >= 0.0, axis=-1)  # SAT: some corner not outside
+        # box axes: triangle AABB vs expanded cell (already restricted to
+        # the AABB range, but fringe cells may still miss on the exact AABB)
+        ov &= (
+            (cx + hw >= lo[ti, 0]) & (cx - hw <= hi[ti, 0])
+            & (cy + hh >= lo[ti, 1]) & (cy - hh <= hi[ti, 1])
+        )
+        full[sl] = f
+        # a cell whose every corner is inside but SAT failed cannot happen
+        partial[sl] = ov & ~f
+        if yield_ratio:
+            time.sleep((time.perf_counter() - t_chunk) * yield_ratio)
+    return tri_idx, gx * G + gy, full, partial
+
+
 def _tri_cell_classify(
     tri: np.ndarray, coeff: np.ndarray, rect: Rect, G: int
 ) -> tuple[np.ndarray, np.ndarray]:
-    """(full_cells, partial_cells) flat cell ids for one triangle.
-
-    Vectorized SAT over the cells of the triangle's clamped AABB:
-    separating axes = 2 box axes + 3 edge normals (closed-set test).
-    Full containment = all 4 cell corners pass all 3 inclusive edge tests.
-    """
-    w = rect.width / G
-    h = rect.height / G
-    # cells are EXPANDED by a float-rounding guard when classifying: a user
-    # whose f32 cell assignment lands one ulp across a boundary must still
-    # see correct counts, so "fully covers the cell" is certified on the
-    # slightly larger box (near-boundary triangles demote to the partial
-    # list, where they are tested exactly).
-    eps = 1e-5 * max(w, h)
-    lo = tri.min(axis=0)
-    hi = tri.max(axis=0)
-    ix0 = int(np.clip(np.floor((lo[0] - eps - rect.xmin) / w), 0, G - 1))
-    ix1 = int(np.clip(np.floor((hi[0] + eps - rect.xmin) / w - 1e-12), 0, G - 1))
-    iy0 = int(np.clip(np.floor((lo[1] - eps - rect.ymin) / h), 0, G - 1))
-    iy1 = int(np.clip(np.floor((hi[1] + eps - rect.ymin) / h - 1e-12), 0, G - 1))
-    if hi[0] < rect.xmin or lo[0] > rect.xmax or hi[1] < rect.ymin or lo[1] > rect.ymax:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-
-    gx = np.arange(ix0, ix1 + 1)
-    gy = np.arange(iy0, iy1 + 1)
-    cx0 = rect.xmin + gx * w - eps  # expanded cell x-lo  [nx]
-    cy0 = rect.ymin + gy * h - eps  # expanded cell y-lo  [ny]
-    CX0, CY0 = np.meshgrid(cx0, cy0, indexing="ij")  # [nx, ny]
-    CX1, CY1 = CX0 + w + 2 * eps, CY0 + h + 2 * eps
-
-    # --- full containment: 4 corners x 3 edges inclusive -----------------
-    corners_x = np.stack([CX0, CX1, CX1, CX0], axis=-1)  # [nx, ny, 4]
-    corners_y = np.stack([CY0, CY0, CY1, CY1], axis=-1)
-    e = (
-        coeff[None, None, None, :, 0] * corners_x[..., None]
-        + coeff[None, None, None, :, 1] * corners_y[..., None]
-        + coeff[None, None, None, :, 2]
-    )  # [nx, ny, 4, 3]
-    corner_inside = np.all(e >= 0.0, axis=-1)  # [nx, ny, 4]
-    full = np.all(corner_inside, axis=-1)  # [nx, ny]
-    any_corner = np.any(corner_inside, axis=-1)
-
-    # --- SAT overlap ------------------------------------------------------
-    # box axes: triangle AABB vs cell (already restricted to AABB range,
-    # but cells at the fringe may still miss on the exact AABB):
-    overlap = (
-        (CX1 >= lo[0]) & (CX0 <= hi[0]) & (CY1 >= lo[1]) & (CY0 <= hi[1])
+    """(full_cells, partial_cells) flat cell ids for one triangle — the
+    single-triangle view of :func:`_tri_cell_classify_many` (the refit
+    path classifies only the changed triangles)."""
+    _, cell, full, partial = _tri_cell_classify_many(
+        tri[None], coeff[None], rect, G
     )
-    # triangle edge normals: cell overlaps iff its max corner projection
-    # onto each inward edge normal is >= 0 (some corner not strictly outside)
-    e_max = np.max(e, axis=2)  # [nx, ny, 3] best corner per edge
-    overlap &= np.all(e_max >= 0.0, axis=-1)
-    # cells whose every corner is inside but SAT failed cannot happen;
-    # partial = overlap and not full
-    partial = overlap & ~full
-    # cheap tightening: a cell with no corner inside and no triangle vertex
-    # inside the cell can still overlap via an edge crossing — SAT already
-    # decided that exactly, so nothing more to do.
-    del any_corner
-
-    flat = (gx[:, None] * G + gy[None, :]).astype(np.int64)
-    return flat[full], flat[partial]
+    return cell[full], cell[partial]
 
 
 def build_grid(
@@ -143,24 +220,26 @@ def build_grid(
     pad_list_to: int | None = None,
 ) -> OccluderGrid:
     """Build the grid index over real (unpadded) triangles."""
-    tris = np.asarray(tris, dtype=np.float64)
-    coeffs64 = np.asarray(coeffs, dtype=np.float64)
-    M = len(tris)
-    base = np.zeros(G * G, np.int32)
-    cell_lists: list[list[int]] = [[] for _ in range(G * G)]
-    for t in range(M):
-        full, partial = _tri_cell_classify(tris[t], coeffs64[t], rect, G)
-        base[full] += 1
-        for c in partial:
-            cell_lists[int(c)].append(t)
-    L = max((len(l) for l in cell_lists), default=0)
-    L = max(L, 1)
+    tris = np.asarray(tris, dtype=np.float64).reshape(-1, 3, 2)
+    coeffs64 = np.asarray(coeffs, dtype=np.float64).reshape(-1, 3, 3)
+    tri_idx, cell, full, partial = _tri_cell_classify_many(
+        tris, coeffs64, rect, G
+    )
+    base = np.bincount(cell[full], minlength=G * G).astype(np.int32)
+    # group the partial pairs by cell (triangle ids ascending within each
+    # cell, matching the order a per-triangle append loop would produce)
+    pc, pt = cell[partial], tri_idx[partial]
+    order = np.lexsort((pt, pc))
+    pc, pt = pc[order], pt[order]
+    cnts = np.bincount(pc, minlength=G * G)
+    L = max(int(cnts.max()) if len(pc) else 0, 1)
     if pad_list_to is not None:
         L = max(L, pad_list_to)
     lists = np.full((G * G, L), -1, np.int32)
-    for c, l in enumerate(cell_lists):
-        if l:
-            lists[c, : len(l)] = l
+    if len(pc):
+        starts = np.concatenate([[0], np.cumsum(cnts)])[:-1]
+        rank = np.arange(len(pc)) - starts[pc]
+        lists[pc, rank] = pt.astype(np.int32)
     return OccluderGrid(
         base=base,
         lists=lists,
@@ -223,6 +302,22 @@ def refit_grid(
     return OccluderGrid(base=base, lists=lists, coeffs=coeffs, G=G, rect=rect)
 
 
+def shape_bucket(x: int, floor: int = 8) -> int:
+    """Round ``x`` up to a quarter-octave shape bucket (>= ``floor``).
+
+    Padded axes quantized through this stay stable under the small size
+    drift dynamic updates produce, so the jitted batch dispatches reuse
+    their compiled executables instead of recompiling every time a scene
+    gains or loses a few triangles.  Overshoot is bounded by ~25% and the
+    padding is semantically free (padded slots contribute nothing).
+    """
+    x = max(int(x), 1)
+    if x <= floor:
+        return floor
+    step = 1 << max((x - 1).bit_length() - 3, 0)
+    return -(-x // step) * step
+
+
 def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Stack per-query grid indices to common static shapes for one batched
     dispatch.
@@ -230,7 +325,9 @@ def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.n
     All grids must share ``G`` and ``rect`` (the serving setup: one domain,
     many query scenes).  Candidate lists are right-padded with ``-1`` to the
     max list length; triangle coefficient tables are padded with degenerate
-    never-inside rows so gathers on padded ids contribute nothing.  Returns
+    never-inside rows so gathers on padded ids contribute nothing.  Both
+    padded axes are :func:`shape_bucket`-quantized for executable reuse
+    across update-churned batches.  Returns
     ``(base [Q, G*G] i32, lists [Q, G*G, L] i32, coeffs [Q, Mt, 3, 3] f32)``.
     """
     if not grids:
@@ -241,8 +338,8 @@ def stack_grids(grids: list[OccluderGrid]) -> tuple[np.ndarray, np.ndarray, np.n
     rect = grids[0].rect
     if any(g.rect != rect for g in grids):
         raise ValueError("all grids in a batch must share the domain rect")
-    L = max(g.lists.shape[1] for g in grids)
-    Mt = max(max(len(g.coeffs), 1) for g in grids)
+    L = shape_bucket(max(g.lists.shape[1] for g in grids), floor=1)
+    Mt = shape_bucket(max(max(len(g.coeffs), 1) for g in grids), floor=1)
     Q = len(grids)
     base = np.stack([g.base for g in grids]).astype(np.int32)
     lists = np.full((Q, G * G, L), -1, np.int32)

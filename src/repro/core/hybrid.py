@@ -59,6 +59,13 @@ class SceneCache:
     stacked scene to share one rect).  Long-lived callers (the engine) pass
     a precomputed ``fp`` so the facility array is fingerprinted once, not
     per query.
+
+    The *read* path (``contains`` / a ``get_or_build`` hit) is lock-free:
+    a plain GIL-atomic dict read, no recency update — so concurrent
+    readers of one engine snapshot never block each other.  Insertions
+    take the internal lock for eviction safety, which makes eviction
+    insertion-ordered (FIFO) rather than strict LRU.  The hit/miss
+    counters are racy-increment statistics by design.
     """
 
     def __init__(self, capacity: int = 256):
@@ -71,8 +78,7 @@ class SceneCache:
         self.delta_dropped = 0
 
     def __len__(self) -> int:
-        with self._lock:
-            return len(self._store)
+        return len(self._store)
 
     @staticmethod
     def fingerprint(facilities: np.ndarray) -> int:
@@ -80,12 +86,11 @@ class SceneCache:
         return hash((f.shape, f.tobytes()[:4096], float(f.sum())))
 
     def contains(self, facilities, q, k, rect=None, *, fp: int | None = None) -> bool:
-        """Peek (no LRU reordering, no stats) — the planner prices a cache
-        hit as "filter phase free" before deciding where to dispatch."""
+        """Peek (no stats) — the planner prices a cache hit as "filter
+        phase free" before deciding where to dispatch.  Lock-free."""
         if fp is None:
             fp = self.fingerprint(facilities)
-        with self._lock:
-            return (fp, _q_key(q), k, rect) in self._store
+        return (fp, _q_key(q), k, rect) in self._store
 
     def get_or_build(
         self, facilities, q, k, rect=None, *, fp: int | None = None, **kw
@@ -93,11 +98,10 @@ class SceneCache:
         if fp is None:
             fp = self.fingerprint(facilities)
         key = (fp, _q_key(q), k, rect)
-        with self._lock:
-            if key in self._store:
-                self._store.move_to_end(key)
-                self.hits += 1
-                return self._store[key], True
+        scene = self._store.get(key)  # lock-free hit path
+        if scene is not None:
+            self.hits += 1
+            return scene, True
         scene = build_scene(facilities, q, k, rect, **kw)
         with self._lock:
             self._store[key] = scene
@@ -106,36 +110,45 @@ class SceneCache:
             self.misses += 1
         return scene, False
 
-    def migrate(self, select, migrate) -> tuple[int, int]:
-        """Delta-aware invalidation: rewrite or drop a subset of entries.
+    def scenes(self) -> list[Scene]:
+        """Snapshot of the cached scenes (migration iterates this)."""
+        with self._lock:
+            return list(self._store.values())
+
+    def cow_migrate(self, select, migrate) -> tuple["SceneCache", int, int]:
+        """Copy-on-write delta migration: build the **next version's**
+        cache without touching this one (readers of the current engine
+        snapshot keep serving it unchanged).
 
         For every entry whose key satisfies ``select(key)``, ``migrate(key,
-        scene)`` is called; a ``(new_key, new_scene)`` return re-keys the
-        entry in place (LRU position preserved), ``None`` drops it.  This
-        is how the dynamic subsystem carries scenes that provably survive
-        an update across the facility-fingerprint / rect change that would
-        otherwise strand them (stale keys are unreachable — dropping them
-        is a capacity concern, re-keying survivors is the perf win).
-        Returns ``(n_migrated, n_dropped)``.
+        scene)`` is called; a ``(new_key, new_scene)`` return carries the
+        entry into the new cache under its post-update key, ``None`` drops
+        it; non-selected entries are carried as-is.  This is how the
+        dynamic subsystem keeps scenes that provably survive an update
+        across the facility-fingerprint change that would otherwise strand
+        them.  The cumulative hit/miss/delta counters carry into the new
+        cache (they are engine-lifetime statistics, not per-version).
+        Returns ``(new_cache, n_migrated, n_dropped)``.
         """
         kept = dropped = 0
         with self._lock:
-            out: "collections.OrderedDict[tuple, Scene]" = collections.OrderedDict()
-            for key, scene in self._store.items():
-                if not select(key):
-                    out[key] = scene
-                    continue
-                res = migrate(key, scene)
-                if res is None:
-                    dropped += 1
-                    continue
-                new_key, new_scene = res
-                out[new_key] = new_scene
-                kept += 1
-            self._store = out
-            self.delta_kept += kept
-            self.delta_dropped += dropped
-        return kept, dropped
+            items = list(self._store.items())
+        new = SceneCache(capacity=self.capacity)
+        for key, scene in items:
+            if not select(key):
+                new._store[key] = scene
+                continue
+            res = migrate(key, scene)
+            if res is None:
+                dropped += 1
+                continue
+            new_key, new_scene = res
+            new._store[new_key] = new_scene
+            kept += 1
+        new.hits, new.misses = self.hits, self.misses
+        new.delta_kept = self.delta_kept + kept
+        new.delta_dropped = self.delta_dropped + dropped
+        return new, kept, dropped
 
 
 _warned_no_profile = False

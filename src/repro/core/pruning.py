@@ -32,10 +32,12 @@ only afterwards) and ``"none"``.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core.geometry import Rect, bisector
+from repro.core.grid import build_yield_ratio
 
 __all__ = ["PruneStats", "prune_facilities", "STRATEGIES", "adaptive_grid"]
 
@@ -205,7 +207,13 @@ def prune_facilities(
     # smaller host loop.  Near ``q`` pruning quality matters most (those
     # facilities define the zone), so chunks start small and grow.
     pos = 0
+    # background maintenance threads (MVCC prewarm) run this loop
+    # deprioritized: each iteration is a few ms of solid C-level work, so
+    # yielding ratio x the iteration's own time keeps foreground readers
+    # at well over the fair-scheduling half of a contended core
     while pos < len(order):
+        yield_ratio = build_yield_ratio()  # per iteration: may be dynamic
+        t_iter = time.perf_counter() if yield_ratio else 0.0
         chunk = 8 if keep.sum() < 4 * k + 8 else 64
         # ---- Eq. (1) bulk reject of everything beyond 2*radius ----------
         if radius < np.inf:
@@ -245,6 +253,8 @@ def prune_facilities(
             )
             cov.counts += full_inv.sum(axis=0).astype(np.int32)
             radius = cov.zone_radius(k, q)
+        if yield_ratio:
+            time.sleep((time.perf_counter() - t_iter) * yield_ratio)
 
     safe_radius = (
         max(2.0 * float(radius), max_processed) if np.isfinite(radius) else np.inf

@@ -29,6 +29,11 @@ class RkNNResult:
     monochromatic queries they are self-hit corrected — ``counts[p]`` is
     the number of *other* points strictly closer to ``p`` than ``q`` is,
     so ``mask == counts < k`` holds in both cases.
+
+    ``version`` is the engine snapshot version the result was served
+    from (0 for static engines and one-shot shims) — under concurrent
+    updates it identifies exactly which ``(facilities, users)`` state the
+    masks are bit-identical to.
     """
 
     mask: np.ndarray  # [N] bool — u ∈ RkNN(q)
@@ -37,6 +42,7 @@ class RkNNResult:
     t_filter_s: float
     t_verify_s: float
     backend: str
+    version: int = 0
 
     @property
     def result_indices(self) -> np.ndarray:
@@ -64,6 +70,8 @@ class RkNNBatchResult:
     t_verify_s: float
     backend: str
     k: int
+    #: Engine snapshot version served (see :class:`RkNNResult.version`).
+    version: int = 0
 
     @property
     def n_queries(self) -> int:
@@ -82,4 +90,5 @@ class RkNNBatchResult:
             t_filter_s=self.t_filter_s / q_n,
             t_verify_s=self.t_verify_s / q_n,
             backend=self.backend,
+            version=self.version,
         )

@@ -1,0 +1,279 @@
+"""Immutable, versioned ownership of all per-dataset derived state.
+
+:class:`EngineSnapshot` is the MVCC unit of the engine: one object owns
+the ``(facilities, users)`` arrays *and* every piece of derived state the
+query paths amortize against them — the domain rect/hull, the facility
+fingerprint, the device-resident user coordinate arrays (plain and
+mesh-sharded), the :class:`~repro.core.hybrid.SceneCache`, the per-scene
+grid/BVH index memo, the grid-pallas user-bucketing memo, and the
+prepared-batch LRU (including ``auto`` plan memos).
+
+Concurrency model (reader side is lock-free):
+
+* Every public query entry point resolves ``snap = engine._snap``
+  exactly **once** — a single atomic attribute read — and serves that
+  version end-to-end.  No lock is acquired anywhere on the read path:
+  the per-snapshot caches below expose GIL-atomic lock-free ``get`` and
+  take their internal lock only on *insertion* (eviction safety), so
+  concurrent readers of one snapshot coordinate without blocking and a
+  writer never touches a published snapshot's caches at all.
+* ``DynamicEngine.apply_updates`` builds version N+1 **off to the side**
+  (copy-on-write: unchanged scenes, indexes, packed planes, bucketing,
+  and device arrays are carried by reference) and publishes it with one
+  atomic reference swap of ``engine._snap``.  In-flight queries keep
+  serving version N; the next query entry sees N+1.
+
+Lazy fields (``rect``, ``xs``/``ys``, fingerprint, the mono sub-engine)
+are computed idempotently from immutable inputs: a racing first touch may
+compute the value twice, both results are equal, and the last assignment
+wins — a benign race, not a correctness hazard.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.geometry import Rect
+
+__all__ = ["LruCache", "IndexMemo", "EngineSnapshot"]
+
+
+class LruCache:
+    """Capacity-bounded mapping with a lock-free read path.
+
+    ``get`` is a plain (GIL-atomic) dict read — no lock, no recency
+    update, so concurrent readers never block; eviction is therefore
+    insertion-ordered (FIFO) rather than strict LRU, which is
+    indistinguishable at the small capacities the engine uses.  ``put``
+    takes the internal lock only to keep eviction consistent under
+    concurrent inserts.
+    """
+
+    __slots__ = ("capacity", "_store", "_lock")
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._store: "collections.OrderedDict[Any, Any]" = collections.OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key) -> bool:
+        return key in self._store
+
+    def get(self, key, default=None):
+        return self._store.get(key, default)
+
+    def put(self, key, value) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            self._store[key] = value
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._store)
+
+    def items(self) -> list:
+        with self._lock:
+            return list(self._store.items())
+
+
+class IndexMemo:
+    """Per-scene index store: ``id(scene) -> (scene, {key: index})``.
+
+    Replaces the old practice of hanging ``_engine_indexes`` /
+    ``_grid_index_memo`` dicts off :class:`~repro.core.scene.Scene`
+    objects via ``object.__setattr__`` — index state now lives with the
+    snapshot that owns the scenes, so an update can migrate or drop it
+    per version without mutating scenes shared across versions.
+
+    Entries hold a *strong* reference to the scene, which both keeps the
+    ``id()`` key valid for the entry's lifetime and bounds memory via the
+    capacity (scenes evicted here simply rebuild their index on next
+    use).  Reads of an existing per-scene store are lock-free; creating
+    or adopting an entry locks for eviction safety.
+    """
+
+    __slots__ = ("capacity", "_store", "_lock")
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = max(int(capacity), 1)
+        self._store: "collections.OrderedDict[int, tuple]" = collections.OrderedDict()
+        self._lock = threading.Lock()
+
+    def peek(self, scene) -> dict | None:
+        """The scene's index store, or ``None`` — never creates."""
+        hit = self._store.get(id(scene))
+        if hit is not None and hit[0] is scene:
+            return hit[1]
+        return None
+
+    def store_for(self, scene) -> dict:
+        """The scene's index store, created (and capacity-evicted) if new."""
+        key = id(scene)
+        hit = self._store.get(key)
+        if hit is not None and hit[0] is scene:
+            return hit[1]
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is not None and hit[0] is scene:
+                return hit[1]
+            store: dict = {}
+            self._store[key] = (scene, store)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+            return store
+
+    def adopt(self, scene, store: dict | None) -> None:
+        """Install ``store`` as the scene's index store (COW carry: the
+        update path moves a surviving scene's indexes into the next
+        snapshot's memo without touching the old snapshot's)."""
+        if store is None:
+            return
+        with self._lock:
+            self._store[id(scene)] = (scene, store)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+
+    def scenes(self) -> list:
+        with self._lock:
+            return [scene for scene, _store in self._store.values()]
+
+    def clone(self) -> "IndexMemo":
+        """Shallow copy — per-scene stores are copied (``dict(store)``) so
+        the two versions stop sharing mutable dicts, while the indexes
+        themselves are shared by reference (structural sharing)."""
+        new = IndexMemo(self.capacity)
+        with self._lock:
+            for key, (scene, store) in self._store.items():
+                new._store[key] = (scene, dict(store))
+        return new
+
+
+class EngineSnapshot:
+    """One immutable version of the engine's dataset + derived state.
+
+    Treated as frozen after publication except for the *lazy* fields
+    (idempotent computations from immutable inputs — see module
+    docstring) and the per-snapshot caches, which are append-only memos
+    readers of this version share.
+    """
+
+    __slots__ = (
+        "version",
+        "facilities",
+        "users",
+        "explicit_rect",
+        "scene_cache",
+        "index_memo",
+        "kernel_memo",
+        "batch_cache",
+        "mesh_xs",
+        "mesh_ys",
+        "mesh_n",
+        "_rect",
+        "_hull",
+        "_fp",
+        "_xs",
+        "_ys",
+        "_mono",
+        "_is_mono",
+        "_pad_waste",
+    )
+
+    def __init__(
+        self,
+        version: int,
+        facilities: np.ndarray,
+        users: np.ndarray,
+        *,
+        rect: Rect | None = None,
+        explicit_rect: bool = False,
+        scene_cache=None,
+        index_capacity: int = 256,
+        batch_capacity: int = 8,
+        kernel_capacity: int = 4,
+    ):
+        self.version = int(version)
+        self.facilities = facilities
+        self.users = users
+        self.explicit_rect = bool(explicit_rect)
+        self.scene_cache = scene_cache
+        self.index_memo = IndexMemo(index_capacity)
+        self.kernel_memo = LruCache(kernel_capacity)
+        self.batch_cache = LruCache(batch_capacity)
+        self.mesh_xs = self.mesh_ys = None
+        self.mesh_n = 0
+        self._rect = rect
+        self._hull: tuple[np.ndarray, np.ndarray] | None = None
+        self._fp: int | None = None
+        self._xs = self._ys = None
+        self._mono = None
+        self._is_mono: bool | None = None
+        self._pad_waste: dict = {}
+
+    # ------------------------------------------------------------------
+    # lazy derived state (idempotent; benign first-touch races)
+    # ------------------------------------------------------------------
+    @property
+    def rect(self) -> Rect:
+        if self._rect is None:
+            self._rect = Rect.from_bounds(*self.hull_bounds())
+        return self._rect
+
+    def hull_bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        """Unpadded min/max of facilities ∪ users (lazy, cached)."""
+        if self._hull is None:
+            pts = np.concatenate([self.facilities, self.users])
+            self._hull = (pts.min(axis=0), pts.max(axis=0))
+        return self._hull
+
+    def fingerprint(self) -> int:
+        if self._fp is None:
+            from repro.core.hybrid import SceneCache
+
+            self._fp = SceneCache.fingerprint(self.facilities)
+        return self._fp
+
+    @property
+    def xs(self) -> jnp.ndarray:
+        if self._xs is None:
+            # assign ys first: a racing reader that observes _xs non-None
+            # must be able to read _ys without a second materialization
+            ys = jnp.asarray(self.users[:, 1], jnp.float32)
+            xs = jnp.asarray(self.users[:, 0], jnp.float32)
+            self._ys = ys
+            self._xs = xs
+        return self._xs
+
+    @property
+    def ys(self) -> jnp.ndarray:
+        self.xs  # noqa: B018 — materializes both
+        return self._ys
+
+    def pad_waste(self, rect: Rect, grid_g: int) -> float:
+        """Measured cell-bucketing pad-waste ratio of this user set
+        (``padded rows / n_users``, ≥ 1) at the engine's grid resolution —
+        the planner's occupancy feature for the grid-pallas family
+        (memoized per (rect, G); see
+        :func:`repro.kernels.grid_raycast.measured_pad_waste`)."""
+        key = (rect, int(grid_g))
+        hit = self._pad_waste.get(key)
+        if hit is None:
+            from repro.kernels.grid_raycast import measured_pad_waste
+
+            hit = measured_pad_waste(
+                self.users[:, 0], self.users[:, 1], rect, int(grid_g)
+            )
+            self._pad_waste[key] = hit
+        return hit

@@ -1,30 +1,37 @@
 """The versioned dynamic engine: incremental updates over ``RkNNEngine``.
 
-Every query path in the static engine assumes a frozen ``(facilities,
-users)`` snapshot; :class:`DynamicEngine` removes that assumption the way
-graphics pipelines do — by *refitting* acceleration state instead of
-rebuilding it:
+Every query path in the static engine serves one immutable
+:class:`~repro.core.snapshot.EngineSnapshot`; :class:`DynamicEngine`
+advances that snapshot the way graphics pipelines do — by *refitting*
+acceleration state instead of rebuilding it, copy-on-write:
 
 * :meth:`apply_updates` takes an :class:`~repro.dynamic.updates.UpdateBatch`
-  (facility insert/delete/move, user insert/delete/move), advances a
-  monotonically increasing ``version``, and reconciles every piece of
-  amortized engine state with the delta rather than dropping it all:
+  (facility insert/delete/move, user insert/delete/move), builds version
+  N+1 **off to the side** with structural sharing against version N, and
+  publishes it with a single atomic reference swap.  Every piece of
+  amortized engine state is reconciled with the delta rather than
+  dropped:
 
-  - **device user arrays** — pure user *moves* scatter into the resident
-    ``xs``/``ys`` (and the mesh-sharded copies) in place; only
-    inserts/deletes force a re-upload;
+  - **device user arrays** — pure user *moves* scatter functionally
+    (``.at[idx].set`` returns new arrays; version N's stay untouched)
+    into the new snapshot's resident ``xs``/``ys`` (and the mesh-sharded
+    copies); only inserts/deletes force a re-upload;
   - **scene cache** — entries are migrated through the three-level
-    survive / refit / rebuild ladder of :mod:`repro.dynamic.refit`: a
-    scene whose pruning certificate the delta does not pierce is re-keyed
-    (row ids remapped) and survives with its memoized grid/BVH indexes; a
-    pierced scene whose kept set a re-prune confirms unchanged is patched
-    (occluder fans of moved facilities respliced, indexes refit via
-    ``Backend.refit_index``); everything else is dropped and rebuilt
-    lazily.  Eager-refit vs lazy-rebuild is a priced decision
+    survive / refit / rebuild ladder of :mod:`repro.dynamic.refit` into
+    the new snapshot's cache: a scene whose pruning certificate the
+    delta does not pierce is re-keyed (row ids remapped) and survives
+    with its memoized grid/BVH indexes; a pierced scene whose kept set a
+    re-prune confirms unchanged is patched (occluder fans of moved
+    facilities respliced, indexes refit via ``Backend.refit_index``);
+    everything else is dropped and rebuilt lazily.  Eager-refit vs
+    lazy-rebuild is a priced decision
     (:class:`~repro.dynamic.policy.RefitPolicy`, fed by the planner's
     cost profile and its own observed EMAs);
-  - **prepared-batch LRU / plan memos** — cleared (they alias user
-    arrays and scene lists wholesale; per-entry surgery is not worth it);
+  - **prepared-batch LRU / plan memos** — carried across the swap for
+    user-only *move* deltas (requests re-pointed at the scattered device
+    arrays; backends whose prepared state bakes in user coordinates are
+    rebuilt — ``Backend.prepared_carries_users``); any facility or
+    shape-changing delta starts the new version's LRU cold;
   - **continuous queries** — one *vectorized* influence-zone dirty test
     runs across all live :class:`~repro.dynamic.continuous.ContinuousQuery`
     handles per update (:func:`~repro.dynamic.continuous.influence_dirty_mask`);
@@ -40,6 +47,7 @@ self.users)`` — for every registered backend.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -48,7 +56,9 @@ import jax.numpy as jnp
 
 from repro.core.backends import get_backend
 from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.core.grid import build_throttle, build_yield_ratio
 from repro.core.pruning import adaptive_grid
+from repro.core.snapshot import EngineSnapshot
 from repro.dynamic.continuous import ContinuousQuery, influence_dirty_mask
 from repro.dynamic.policy import RefitPolicy
 from repro.dynamic.refit import refit_scene, remap_scene, scene_update_safe
@@ -56,6 +66,12 @@ from repro.dynamic.updates import UpdateBatch, apply_to_points, changed_position
 from repro.planner.models import WorkloadShape
 
 __all__ = ["DynamicEngine", "UpdateReport", "DynamicStats"]
+
+#: Writer-side scene prewarm budget per update: standing scenes the
+#: migration dropped are rebuilt into the NEXT snapshot before it
+#: publishes (readers keep serving the current version meanwhile), capped
+#: so one pathological delta cannot stall the writer indefinitely.
+PREWARM_SCENES_CAP = 64
 
 
 @dataclasses.dataclass
@@ -68,9 +84,11 @@ class UpdateReport:
     scenes_survived: int = 0
     scenes_refit: int = 0
     scenes_dropped: int = 0
+    scenes_prewarmed: int = 0
     indexes_refit: int = 0
     indexes_rebuilt: int = 0
     users_scattered: bool = False
+    batches_carried: int = 0
     continuous_patched: int = 0
     continuous_skipped: int = 0
     continuous_events: int = 0
@@ -85,34 +103,41 @@ class DynamicStats:
     scenes_survived: int = 0
     scenes_refit: int = 0
     scenes_dropped: int = 0
+    scenes_prewarmed: int = 0
     indexes_refit: int = 0
     indexes_rebuilt: int = 0
     user_scatters: int = 0
     user_reuploads: int = 0
+    batches_carried: int = 0
 
 
 class DynamicEngine(RkNNEngine):
     """A :class:`RkNNEngine` whose snapshot can change underneath it.
 
     Construction matches the static engine; all query methods are
-    inherited unchanged and always serve the **latest** snapshot
-    (``self.version``).  See module docstring for the update semantics.
-
-    **Single-writer contract**: :meth:`apply_updates` must not run
-    concurrently with any query — including an active :meth:`stream`,
-    whose producer thread builds scenes in the background.  An update
-    racing a query would serve a mix of old and new snapshots with no
-    error.  Serialize updates against queries (drain streams first); a
-    reader-writer snapshot swap is a ROADMAP follow-on.
+    inherited unchanged.  Each query call resolves the engine's current
+    :class:`~repro.core.snapshot.EngineSnapshot` exactly once at entry
+    and serves that version end-to-end, so **queries run concurrently
+    with updates without any lock on the read path**: an
+    :meth:`apply_updates` racing a query (or an active :meth:`stream`)
+    never produces a mixed old/new view — in-flight work finishes on
+    version N while the swap publishes N+1, and every result reports the
+    snapshot ``version`` it is bit-identical to.  Concurrent *writers*
+    are serialized against each other by an internal writer lock.
     """
 
     def __init__(self, facilities, users, config: RkNNConfig | None = None, **kw):
         super().__init__(facilities, users, config, **kw)
-        self.version = 0
         self.update_stats = DynamicStats()
         self.refit_policy = RefitPolicy()
+        self._writer_lock = threading.Lock()  # writer-writer only
         self._continuous: list[ContinuousQuery] = []
         self._update_log: list[UpdateReport] = []
+
+    @property
+    def version(self) -> int:
+        """The currently published snapshot's version (monotonic)."""
+        return self._snap.version
 
     # ------------------------------------------------------------------
     # continuous queries
@@ -121,7 +146,8 @@ class DynamicEngine(RkNNEngine):
         """Register a standing RkNN query (facility index or ``[2]``
         point); it is re-evaluated on exactly the updates that can change
         it and streams ``(version, RkNNResult)`` via ``poll()``."""
-        cq = ContinuousQuery(self.facilities, self.users, q, k, self.version)
+        snap = self._snap
+        cq = ContinuousQuery(snap.facilities, snap.users, q, k, snap.version)
         self._continuous.append(cq)
         return cq
 
@@ -132,33 +158,60 @@ class DynamicEngine(RkNNEngine):
     # ------------------------------------------------------------------
     # observed rebuild costs feed the refit-vs-rebuild frontier
     # ------------------------------------------------------------------
-    def _build_scene(self, q, k: int, rect, *, pad_to: int | None = None):
-        misses = self.scene_cache.misses if self.scene_cache is not None else None
+    def _build_scene(
+        self, snap: EngineSnapshot, q, k: int, rect, *, pad_to: int | None = None
+    ):
+        misses = snap.scene_cache.misses if snap.scene_cache is not None else None
         t0 = time.perf_counter()
-        scene = super()._build_scene(q, k, rect, pad_to=pad_to)
-        if misses is not None and self.scene_cache.misses > misses:
+        scene = super()._build_scene(snap, q, k, rect, pad_to=pad_to)
+        if (
+            misses is not None
+            and snap.scene_cache.misses > misses
+            and build_yield_ratio() == 0.0
+        ):
+            # throttled (deprioritized-prewarm) builds sleep ~2x their CPU
+            # time — feeding that wall time into the frontier would teach
+            # the policy that rebuilds cost 3x what they do
             self.refit_policy.observe("rebuild", time.perf_counter() - t0)
         return scene
 
     # ------------------------------------------------------------------
-    # the update path
+    # the update path (the writer side of the MVCC pair)
     # ------------------------------------------------------------------
     def apply_updates(self, batch: UpdateBatch | None = None, **deltas) -> UpdateReport:
         """Apply one atomic delta; returns the new-version report.
 
         Accepts either a prebuilt :class:`UpdateBatch` or its fields as
         keyword arguments (``apply_updates(user_move=(ids, pts))``).
+        Builds the next snapshot copy-on-write and publishes it with one
+        atomic reference swap — concurrent queries are never blocked and
+        never observe a partial update.
         """
         if batch is None:
             batch = UpdateBatch(**deltas)
         elif deltas:
             raise TypeError("pass either an UpdateBatch or keyword deltas, not both")
-        batch.validate(len(self.facilities), len(self.users))
-        t0 = time.perf_counter()
+        with self._writer_lock:
+            # Deprioritize the whole writer pass *dynamically*: the ratio
+            # flips from 0 to 2.0 the moment a concurrent reader bumps the
+            # read clock, making migration/refit/prewarm hot loops yield —
+            # an idle engine (batch ingest, the refit-vs-rebuild bench)
+            # never sleeps because the clock never moves mid-update.
+            read_mark = self._read_clock
+            with build_throttle(
+                lambda: 2.0 if self._read_clock != read_mark else 0.0
+            ):
+                return self._apply_updates_locked(batch)
 
-        old_f, old_u = self.facilities, self.users
-        old_rect = None if self._explicit_rect else self.rect
-        old_fp = self._fingerprint()
+    def _apply_updates_locked(self, batch: UpdateBatch) -> UpdateReport:
+        old = self._snap
+        batch.validate(len(old.facilities), len(old.users))
+        t0 = time.perf_counter()
+        read_mark = self._read_clock  # readers seen since here => contended
+
+        old_f, old_u = old.facilities, old.users
+        old_rect = None if old.explicit_rect else old.rect
+        old_fp = old.fingerprint()
         old_grid = adaptive_grid(len(old_f))  # pruning resolution regime
 
         new_f, map_f = apply_to_points(
@@ -169,45 +222,56 @@ class DynamicEngine(RkNNEngine):
         )
         changed_pos = changed_positions(batch, old_f)
 
-        # ---- swap in the new snapshot ---------------------------------
-        self.facilities = new_f
-        self.users = new_u
-        self._hull = None
-        if not self._explicit_rect:
-            self._rect = None
-        rect_changed = (not self._explicit_rect) and self.rect != old_rect
-        if batch.touches_facilities:
-            self._fp = None
-        new_fp = self._fingerprint()
+        # ---- build version N+1 off to the side ------------------------
+        new = self._make_snapshot(
+            old.version + 1,
+            new_f,
+            new_u,
+            rect=old._rect if old.explicit_rect else None,
+            explicit_rect=old.explicit_rect,
+            scene_cache=None,  # installed below (migrated COW)
+        )
+        rect_changed = (not old.explicit_rect) and new.rect != old_rect
+        if not batch.touches_facilities:
+            new._fp = old._fp  # same facility content → same fingerprint
 
         report = UpdateReport(
-            version=self.version + 1, t_update_s=0.0, rect_changed=rect_changed
+            version=new.version, t_update_s=0.0, rect_changed=rect_changed
         )
 
         # ---- device-resident user coordinates -------------------------
         if batch.touches_users:
-            self._refit_user_arrays(batch, report)
+            self._cow_user_arrays(old, new, batch, report)
+        else:
+            # untouched users: carry device arrays by reference
+            new._ys = old._ys
+            new._xs = old._xs
+            new.mesh_xs, new.mesh_ys = old.mesh_xs, old.mesh_ys
+            new.mesh_n = old.mesh_n
+            # the bucketing memo is content-addressed by the identity of
+            # the carried xs array — safe to share across versions
+            new.kernel_memo = old.kernel_memo
 
-        # ---- prepared-batch LRU + plan memos: alias the old snapshot --
-        with self._batch_lock:
-            self._batch_cache.clear()
-        # the grid's mesh-sharded jitted step closes over the domain rect
-        if rect_changed:
-            for key in [k for k in self._mesh_steps if k[0] == "grid"]:
-                del self._mesh_steps[key]
-        # the mono sub-engine snapshots the facility set at construction
-        self._mono = None
-        self._is_mono = None
-
-        # ---- scene cache: survive / refit / rebuild -------------------
-        if self.scene_cache is not None:
-            self._migrate_scene_cache(
-                batch, old_fp, new_fp, old_rect, rect_changed,
+        # ---- scene cache + index memo: survive / refit / rebuild ------
+        prewarm: list[tuple] = []
+        if old.scene_cache is not None:
+            new.scene_cache, prewarm = self._migrate_scene_cache(
+                old, new, batch, old_fp, rect_changed,
                 old_grid, map_f, changed_pos, report,
             )
 
-        # ---- continuous queries ---------------------------------------
-        self.version += 1
+        # ---- prepared-batch LRU + plan memos --------------------------
+        self._cow_batch_cache(old, new, batch, rect_changed, report)
+
+        # ---- writer-side prewarm: rebuild dropped standing scenes into
+        # the unpublished snapshot so readers never pay the host rebuild
+        if prewarm:
+            self._prewarm_scenes(new, prewarm, report, read_mark)
+
+        # ---- publish: one atomic reference swap -----------------------
+        self._snap = new
+
+        # ---- continuous queries (reconciled against the new version) --
         ctx = _UpdateContext(
             batch=batch,
             old_facilities=old_f,
@@ -216,10 +280,10 @@ class DynamicEngine(RkNNEngine):
             new_users=new_u,
             map_f=map_f,
             map_u=map_u,
-            version=self.version,
+            version=new.version,
         )
         # closed/dead handles are dropped here, not at close() time — the
-        # handle list is only ever touched on the update path (single-writer)
+        # handle list is only ever touched on the (serialized) update path
         self._continuous = [cq for cq in self._continuous if cq.alive]
         if self._continuous:
             dirty = self._dirty_continuous(batch, changed_pos)
@@ -239,8 +303,10 @@ class DynamicEngine(RkNNEngine):
         self.update_stats.scenes_survived += report.scenes_survived
         self.update_stats.scenes_refit += report.scenes_refit
         self.update_stats.scenes_dropped += report.scenes_dropped
+        self.update_stats.scenes_prewarmed += report.scenes_prewarmed
         self.update_stats.indexes_refit += report.indexes_refit
         self.update_stats.indexes_rebuilt += report.indexes_rebuilt
+        self.update_stats.batches_carried += report.batches_carried
         self._update_log.append(report)
         if len(self._update_log) > 128:
             del self._update_log[0]
@@ -271,9 +337,17 @@ class DynamicEngine(RkNNEngine):
         return dirty
 
     # ------------------------------------------------------------------
-    def _refit_user_arrays(self, batch: UpdateBatch, report: UpdateReport) -> None:
-        """Masked scatter into the resident device arrays for pure moves;
-        re-upload (lazily) on any shape change."""
+    def _cow_user_arrays(
+        self,
+        old: EngineSnapshot,
+        new: EngineSnapshot,
+        batch: UpdateBatch,
+        report: UpdateReport,
+    ) -> None:
+        """Functional scatter into the new snapshot's device arrays for
+        pure moves (version N's arrays stay untouched — readers of the
+        old snapshot keep serving them); re-upload (lazily) on any shape
+        change."""
         mv_ids, mv_pts = batch.user_move
         moves_only = (
             len(mv_ids) > 0
@@ -281,59 +355,156 @@ class DynamicEngine(RkNNEngine):
             and not len(batch.user_delete)
         )
         if moves_only:
-            if self._xs is not None:
+            if old._xs is not None:
                 idx = jnp.asarray(mv_ids)
-                self._xs = self._xs.at[idx].set(jnp.asarray(mv_pts[:, 0], jnp.float32))
-                self._ys = self._ys.at[idx].set(jnp.asarray(mv_pts[:, 1], jnp.float32))
+                # ys before xs: a racing reader keyed on _xs sees both
+                new._ys = old._ys.at[idx].set(jnp.asarray(mv_pts[:, 1], jnp.float32))
+                new._xs = old._xs.at[idx].set(jnp.asarray(mv_pts[:, 0], jnp.float32))
                 report.users_scattered = True
                 self.update_stats.user_scatters += 1
         else:
-            self._xs = self._ys = None  # shape changed: lazy re-upload on next use
-            self.update_stats.user_reuploads += 1
+            self.update_stats.user_reuploads += 1  # lazy re-upload on next use
         if self.mesh is not None:
-            if moves_only:
+            if moves_only and old.mesh_xs is not None:
                 idx = jnp.asarray(mv_ids)
-                self._mesh_xs = self._mesh_xs.at[idx].set(
+                new.mesh_xs = old.mesh_xs.at[idx].set(
                     jnp.asarray(mv_pts[:, 0], jnp.float32)
                 )
-                self._mesh_ys = self._mesh_ys.at[idx].set(
+                new.mesh_ys = old.mesh_ys.at[idx].set(
                     jnp.asarray(mv_pts[:, 1], jnp.float32)
                 )
+                new.mesh_n = old.mesh_n
             else:
-                self._init_mesh(self.mesh)
+                self._init_mesh(new, self.mesh)
+
+    # ------------------------------------------------------------------
+    def _cow_batch_cache(
+        self,
+        old: EngineSnapshot,
+        new: EngineSnapshot,
+        batch: UpdateBatch,
+        rect_changed: bool,
+        report: UpdateReport,
+    ) -> None:
+        """Carry prepared batches into the new snapshot for user-only
+        *move* deltas.
+
+        The prepared state of the dense/grid/bvh families is a pure
+        function of the scenes (which a user-only delta cannot touch), so
+        the expensive stacking survives verbatim — only the request's
+        user-side references are re-pointed at the scattered device
+        arrays.  Backends that bake user coordinates into their prepared
+        state (``prepared_carries_users`` — the grid-pallas cell sort)
+        are rebuilt lazily.  Facility deltas, rect changes, and |U| shape
+        changes start the new version cold: their keys or row counts are
+        stale wholesale.
+        """
+        if batch.touches_facilities or rect_changed:
+            return
+        if not batch.touches_users:
+            # nothing moved the users either: the whole LRU is still valid
+            for key, value in old.batch_cache.items():
+                new.batch_cache.put(key, value)
+                report.batches_carried += 1
+            return
+        if len(batch.user_insert) or len(batch.user_delete):
+            return  # |U| changed: every prepared row count is stale
+        for key, value in old.batch_cache.items():
+            if key[0] == "auto-plan":
+                # assignment + scenes are user-count-independent; prices
+                # shift negligibly under a pure move
+                new.batch_cache.put(key, value)
+                report.batches_carried += 1
+                continue
+            b = get_backend(key[1] if key[0] == "auto" else key[0])
+            if b.prepared_carries_users:
+                continue
+            req, prepared, scenes = value
+            if req.dispatch is not None:
+                dispatch = self._mesh_dispatch_for(new, b, rect=req.rect, k=req.k)
+                if dispatch is None:
+                    continue
+                req = dataclasses.replace(
+                    req, dispatch=dispatch, users=new.users, memo=new.kernel_memo
+                )
+            else:
+                req = dataclasses.replace(
+                    req,
+                    xs=new.xs,
+                    ys=new.ys,
+                    users=new.users,
+                    memo=new.kernel_memo,
+                )
+            new.batch_cache.put(key, (req, prepared, scenes))
+            report.batches_carried += 1
 
     # ------------------------------------------------------------------
     def _migrate_scene_cache(
         self,
+        old: EngineSnapshot,
+        new: EngineSnapshot,
         batch: UpdateBatch,
         old_fp: int,
-        new_fp: int,
-        old_rect,
         rect_changed: bool,
         old_grid: int,
         map_f: np.ndarray,
         changed_pos: np.ndarray,
         report: UpdateReport,
-    ) -> None:
-        cache = self.scene_cache
+    ):
+        """The new snapshot's scene cache (COW), with surviving / refit
+        scenes' index stores adopted into ``new.index_memo``.
+
+        Returns ``(cache, prewarm)`` where ``prewarm`` lists the
+        ``(q, k)`` of dropped standing entries whose query still exists
+        post-update — :meth:`_prewarm_scenes` rebuilds those into the
+        unpublished snapshot so readers never pay the rebuild."""
+        cache = old.scene_cache
+        prewarm: list[tuple] = []
+        # Prewarm only when facility identity is stable (no insert/delete,
+        # i.e. map_f is the identity): churn remaps row indices, so a
+        # rebuilt scene would sit under the remapped id while standing
+        # index-addressed workloads keep asking for the raw one — all of
+        # the eager work would miss (measured: flips fchurn from ~1x to
+        # a 0.4x loss).  Same stability condition as the refit attempt.
+        stable_ids = not len(batch.facility_insert) and not len(batch.facility_delete)
+
+        def note_drop(q_key, k):
+            if not stable_ids:
+                return
+            if isinstance(q_key, (int, np.integer)):
+                new_q = int(map_f[int(q_key)])
+                if new_q >= 0:  # the query facility still exists
+                    prewarm.append((new_q, k))
+            else:
+                prewarm.append((np.asarray(q_key, np.float64), k))
+
+        def drop_all(key, scene):
+            if key[0] == old_fp and key[3] == old.rect:
+                note_drop(key[1], key[2])
+            return None
+
         if rect_changed:
             # every cached scene was clipped against the old domain; a cold
-            # engine would build different geometry — purge wholesale
-            _, dropped = cache.migrate(lambda key: True, lambda key, s: None)
+            # engine would build different geometry — start cold
+            new_cache, _, dropped = cache.cow_migrate(lambda key: True, drop_all)
             report.scenes_dropped += dropped
-            return
+            return new_cache, prewarm
         if not batch.touches_facilities:
             # user-only delta with a stable hull: scenes depend on
-            # (facilities, q, k, rect) alone — every entry survives as-is
+            # (facilities, q, k, rect) alone — the cache is shared by
+            # reference (it is append-only and internally locked) and
+            # every index survives with its scene
             report.scenes_survived += len(cache)
-            return
+            new.index_memo = old.index_memo.clone()
+            return cache, prewarm
         # adaptive pruning-grid regime flip: a cold re-prune would run at a
         # different resolution — nothing survives
-        if self.config.prune_grid is None and adaptive_grid(len(self.facilities)) != old_grid:
-            _, dropped = cache.migrate(lambda key: True, lambda key, s: None)
+        if self.config.prune_grid is None and adaptive_grid(len(new.facilities)) != old_grid:
+            new_cache, _, dropped = cache.cow_migrate(lambda key: True, drop_all)
             report.scenes_dropped += dropped
-            return
+            return new_cache, prewarm
 
+        new_fp = new.fingerprint()
         moved_ids_old = batch.facility_move[0]
         moved_new = map_f[moved_ids_old] if len(moved_ids_old) else np.zeros(0, np.int64)
         grid_param = self.config.prune_grid
@@ -342,16 +513,19 @@ class DynamicEngine(RkNNEngine):
         # set, so the attempt's re-prune (the expensive part) is a near-
         # certain write-off — measured to flip the churn regime from a win
         # to a 0.6x loss when attempted indiscriminately.
-        moves_only = not len(batch.facility_insert) and not len(batch.facility_delete)
+        moves_only = stable_ids
 
         def migrate(key, scene):
             _fp, q_key, k, rect = key
-            if rect != self.rect:
+            if rect != new.rect:
                 return None  # transient-rect entry (out-of-hull point query)
             if isinstance(q_key, (int, np.integer)):
                 new_q = int(map_f[int(q_key)])
-                if new_q < 0 or (len(moved_ids_old) and np.any(moved_ids_old == q_key)):
-                    return None  # the query facility itself is gone / moved
+                if new_q < 0:
+                    return None  # the query facility itself is gone
+                if len(moved_ids_old) and np.any(moved_ids_old == q_key):
+                    note_drop(q_key, k)  # still standing, at a new position
+                    return None
                 q_build: int | np.ndarray = new_q
                 new_q_key: int | tuple = new_q
             else:
@@ -359,11 +533,14 @@ class DynamicEngine(RkNNEngine):
                 new_q_key = q_key
             if scene_update_safe(scene, changed_pos):
                 report.scenes_survived += 1
-                return (new_fp, new_q_key, k, rect), remap_scene(
-                    scene, map_f, len(self.facilities)
-                )
+                new_scene = remap_scene(scene, map_f, len(new.facilities))
+                store = old.index_memo.peek(scene)
+                if store is not None:  # indexes ride the surviving geometry
+                    new.index_memo.adopt(new_scene, dict(store))
+                return (new_fp, new_q_key, k, rect), new_scene
             # pierced certificate: priced eager-refit vs lazy-rebuild
             if not moves_only:
+                note_drop(q_key, k)
                 return None
             n = scene.n_tris
             owner_new = map_f[scene.owner[:n][scene.owner[:n] >= 0]]
@@ -371,16 +548,17 @@ class DynamicEngine(RkNNEngine):
                 int(np.isin(owner_new, moved_new).sum()) if len(moved_new) else 0
             )
             shape = WorkloadShape(
-                len(self.facilities), len(self.users), k, 1, m_tris=max(n, 1)
+                len(new.facilities), len(new.users), k, 1, m_tris=max(n, 1)
             )
             decision = self.refit_policy.price(shape, n_changed, n)
             if decision.action != "refit":
+                note_drop(q_key, k)
                 return None
             t0 = time.perf_counter()
             out = refit_scene(
                 scene,
                 map_f,
-                self.facilities,
+                new.facilities,
                 q_build,
                 k,
                 rect,
@@ -392,30 +570,81 @@ class DynamicEngine(RkNNEngine):
                 # a bailed refit attempt is neither a refit nor a rebuild
                 # observation — feeding its (small) cost into either EMA
                 # would skew the frontier
+                note_drop(q_key, k)
                 return None
             new_scene, changed_tris = out
-            store = getattr(scene, "_engine_indexes", None)
+            store = old.index_memo.peek(scene)
             if store:
                 new_store = {}
+                refitted: dict[int, tuple] = {}  # grid/grid-pallas share one build
                 for (bname, g), index in store.items():
                     if index is None:  # index-less backend (dense paths)
                         new_store[(bname, g)] = None
                         continue
-                    idx, was_refit = get_backend(bname).refit_index(
-                        index, scene, new_scene, changed_tris, grid_g=g
-                    )
-                    new_store[(bname, g)] = idx
-                    if was_refit:
-                        report.indexes_refit += 1
-                    else:
-                        report.indexes_rebuilt += 1
-                object.__setattr__(new_scene, "_engine_indexes", new_store)
+                    hit = refitted.get(id(index))
+                    if hit is None:
+                        hit = get_backend(bname).refit_index(
+                            index, scene, new_scene, changed_tris, grid_g=g
+                        )
+                        refitted[id(index)] = hit
+                        if hit[1]:
+                            report.indexes_refit += 1
+                        else:
+                            report.indexes_rebuilt += 1
+                    new_store[(bname, g)] = hit[0]
+                new.index_memo.adopt(new_scene, new_store)
             self.refit_policy.observe("refit", time.perf_counter() - t0)
             report.scenes_refit += 1
             return (new_fp, new_q_key, k, rect), new_scene
 
-        _, dropped = cache.migrate(lambda key: key[0] == old_fp, migrate)
+        new_cache, _, dropped = cache.cow_migrate(
+            lambda key: key[0] == old_fp, migrate
+        )
         report.scenes_dropped += dropped
+        return new_cache, prewarm
+
+    def _prewarm_scenes(
+        self,
+        new: EngineSnapshot,
+        pending: list[tuple],
+        report: UpdateReport,
+        read_mark: int,
+    ) -> None:
+        """Writer-side prewarm (the writer pays, readers never do).
+
+        Standing scenes the migration dropped are rebuilt into the NEXT
+        snapshot before it publishes — concurrent readers keep serving
+        the current version meanwhile, and the first queries on the new
+        version find warm scenes (and, for the engine's configured
+        concrete backend, warm indexes) instead of stalling on the host
+        rebuild.  Bounded by :data:`PREWARM_SCENES_CAP`.
+
+        Prewarm is background maintenance, so under *contention* it runs
+        deprioritized: the writer-wide dynamic :func:`~repro.core.grid.
+        build_throttle` makes the classify/prune hot loops yield the GIL
+        ~2x their own CPU time, and each rebuilt scene is additionally
+        followed by a half-length sleep.  On a contended core that keeps
+        concurrent readers at well over half the CPU — the publish just
+        lands a little later, which MVCC makes harmless.  Contention is
+        detected from the lock-free read clock (queries bump
+        ``_read_clock``; the writer samples it per scene): an idle engine
+        — the refit-vs-rebuild benchmark, batch ingest jobs — prewarms
+        at full speed instead of sleeping for absent readers.
+        """
+        backend = get_backend(self.config.backend)
+        warm_index = backend.uses_scene and not backend.is_meta
+        for q_build, k in pending[:PREWARM_SCENES_CAP]:
+            contended = self._read_clock != read_mark
+            read_mark = self._read_clock
+            t0 = time.perf_counter()
+            scene = self._build_scene(new, q_build, k, new.rect)
+            if warm_index:
+                self._index_for(new, backend, scene)
+            report.scenes_prewarmed += 1
+            if contended:
+                # coarse backstop for the build work outside the yielding
+                # hot loops (COW copies, occluder geometry, list packing)
+                time.sleep(0.5 * (time.perf_counter() - t0))
 
 
 @dataclasses.dataclass

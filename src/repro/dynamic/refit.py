@@ -9,8 +9,9 @@ cold rebuild from the post-update snapshot:
    certificate — a cold re-prune would examine the identical chunked
    prefix and reject the rest, so the scene (triangles, coefficients,
    kept set) is unchanged.  Only row *ids* may have shifted (deletions
-   compact the array); :func:`remap_scene` rewrites ``keep``/``owner``
-   and carries the memoized per-backend indexes along untouched.
+   compact the array); :func:`remap_scene` rewrites ``keep``/``owner``,
+   and the caller adopts the memoized per-backend indexes into the next
+   snapshot's index memo untouched.
 
 2. **Refit** (:func:`refit_scene`): the update lands inside the
    certificate, but a re-prune confirms the kept facility set is
@@ -51,16 +52,11 @@ def scene_update_safe(scene: Scene, changed_pos: np.ndarray) -> bool:
     return bool(np.all(d > safe))
 
 
-def _carry_indexes(old: Scene, new: Scene) -> None:
-    store = getattr(old, "_engine_indexes", None)
-    if store is not None:
-        object.__setattr__(new, "_engine_indexes", store)
-
-
 def remap_scene(scene: Scene, index_map: np.ndarray, n_new: int) -> Scene:
     """Rewrite ``keep``/``owner`` row ids through ``index_map`` for a scene
-    whose geometry survives an update unchanged.  Triangle arrays (and the
-    memoized grid/BVH indexes riding on them) are shared, not copied.
+    whose geometry survives an update unchanged.  Triangle arrays are
+    shared, not copied; the memoized grid/BVH indexes are adopted into the
+    new snapshot's :class:`~repro.core.snapshot.IndexMemo` by the caller.
 
     Every kept facility must survive the update — the survival test
     guarantees it (a deleted kept facility is within the certificate).
@@ -86,7 +82,6 @@ def remap_scene(scene: Scene, index_map: np.ndarray, n_new: int) -> Scene:
         heights=scene.heights,
         stats=dataclasses.replace(scene.stats, n_facilities=n_new),
     )
-    _carry_indexes(scene, new)
     return new
 
 

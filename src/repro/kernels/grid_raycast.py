@@ -42,6 +42,7 @@ from repro.kernels.compat import tpu_compiler_params
 
 __all__ = [
     "auto_cell_block",
+    "measured_pad_waste",
     "prepare_cell_buckets",
     "pack_cell_coeff_planes",
     "repack_cell_coeff_planes",
@@ -66,6 +67,31 @@ def auto_cell_block(n_users: int, n_occupied_cells: int) -> int:
     occ = max(int(n_occupied_cells), 1)
     mean = max(int(np.ceil(n_users / occ)), 1)
     return int(min(256, max(8, 1 << int(np.ceil(np.log2(mean))))))
+
+
+def measured_pad_waste(xs, ys, rect, G: int) -> float:
+    """Exact pad-waste ratio of :func:`prepare_cell_buckets` at
+    ``block=None``: padded user rows / real user rows (≥ 1).
+
+    The cell-bucketed kernels' verify cost tracks the *padded* total
+    (``~ n + occupied · block``), not the raw user count — this ratio is
+    the planner's occupancy feature (``log_pw``).  Computed from the same
+    cell classification and :func:`auto_cell_block` choice as the real
+    bucketing, without the sort or the scatter.
+    """
+    xs = np.asarray(xs, np.float32)
+    ys = np.asarray(ys, np.float32)
+    n = len(xs)
+    if n == 0:
+        return 1.0
+    w = rect.width / G
+    h = rect.height / G
+    cx = np.clip(np.floor((xs - rect.xmin) / w), 0, G - 1).astype(np.int64)
+    cy = np.clip(np.floor((ys - rect.ymin) / h), 0, G - 1).astype(np.int64)
+    _uniq, lens = np.unique(cx * G + cy, return_counts=True)
+    block = auto_cell_block(n, len(lens))
+    padded = ((lens + block - 1) // block) * block
+    return float(max(int(padded.sum()) / n, 1.0))
 
 
 def prepare_cell_buckets(xs, ys, rect, G: int, block: int | None = 256):

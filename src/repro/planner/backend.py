@@ -112,18 +112,33 @@ class PlannerBackend:
         backend's total by more than ``split_margin``; otherwise the whole
         batch consolidates onto that single backend (all costs compared at
         the same per-query granularity, so the margin is apples-to-apples).
+
+        Queries are priced at the backend's **average per-query cost at
+        this batch's scale** — ``predict(q=Q) / Q`` — not its standalone
+        ``q=1`` cost: a backend with batch economies (the bucketed grid
+        shares one user sort across the dispatch; its fitted q-exponent is
+        well below 1) serves a query inside a Q-batch far cheaper than
+        alone.  This keeps the per-query partition consistent with the
+        batch-level rank (a single-backend assignment sums to exactly the
+        batch prediction) instead of systematically flipping batch-economy
+        backends onto their unamortized q=1 cost.
         """
+        import dataclasses
+
         import numpy as np
 
         from repro.planner.models import featurize
 
         prof = self.profile()
         cands = candidates or self.candidates(prof)
-        feats = np.stack([featurize(s) for s in shapes])  # [Q, n_features]
+        Q = max(len(shapes), 1)
+        feats = np.stack(
+            [featurize(dataclasses.replace(s, q=Q)) for s in shapes]
+        )  # [Q, n_features], each priced at full-batch scale
         hits = np.array([s.cache_hit for s in shapes], bool)
         costs = np.stack(
-            [prof.models[c].predict_total_many_s(feats, hits) for c in cands]
-        )  # [C, Q]
+            [prof.models[c].predict_total_many_s(feats, hits) / Q for c in cands]
+        )  # [C, Q] average per-query cost within this batch
         totals = costs.sum(axis=1)
         best_single = int(np.argmin(totals))
         winner = np.argmin(costs, axis=0)  # [Q]
@@ -219,7 +234,7 @@ class PlannerBackend:
     # ------------------------------------------------------------------
     # raw Backend protocol (direct use, no engine): delegate, no split
     # ------------------------------------------------------------------
-    def build_index(self, scene, *, grid_g: int = 64):
+    def build_index(self, scene, *, grid_g: int = 64, memo: dict | None = None):
         return None
 
     def prepare_batch(self, req):

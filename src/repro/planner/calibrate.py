@@ -59,6 +59,15 @@ def _mean_scene_tris(w: Workload) -> float:
     return float(max(np.mean(sizes), 1.0))
 
 
+def _measured_pw(w: Workload, grid_g: int = 64) -> float:
+    """Exact cell-bucketing pad-waste ratio of the workload's users."""
+    from repro.core.geometry import Rect
+    from repro.kernels.grid_raycast import measured_pad_waste
+
+    rect = Rect.from_points(w.facilities, w.users)
+    return measured_pad_waste(w.users[:, 0], w.users[:, 1], rect, grid_g)
+
+
 def measure_backend(
     w: Workload, backend: str, repeats: int = 2
 ) -> tuple[float, float]:
@@ -124,10 +133,14 @@ def calibrate(
     # estimate: an estimated m is an exact function of the other features,
     # and fitting on it aliases the m exponent against F and k — the model
     # then misprices any query whose actual scene size is substituted
+    # pad_waste is likewise MEASURED (exact bucketing ratio of the actual
+    # user set), so clustered regimes teach the occupancy exponent instead
+    # of the uniform-density fallback, which is a pure function of u
     shapes = [
         WorkloadShape(
             len(w.facilities), len(w.users), w.k, len(w.qs),
             m_tris=_mean_scene_tris(w),
+            pad_waste=_measured_pw(w),
         )
         for w in workloads
     ]
@@ -151,11 +164,16 @@ def calibrate(
                     file=sys.stderr,
                 )
         # geometry-free methods cannot depend on the scene size — pin that
-        # exponent to zero instead of letting it alias against |F|
+        # exponent to zero instead of letting it alias against |F|; only
+        # the grid family pays pad waste (the bucketed kernel stages padded
+        # cell rows, the gather kernel pays the max list width L per user),
+        # so every other backend pins log_pw rather than letting it alias
+        # against log_u
         scene_free = name == "slice" or not get_backend(name).uses_scene
-        models[name] = BackendCostModel.fit(
-            name, shapes, tf, tv, drop=("log_m",) if scene_free else ()
-        )
+        drop: tuple[str, ...] = ("log_m",) if scene_free else ()
+        if name not in ("grid", "grid-pallas", "grid-pallas-ref"):
+            drop = drop + ("log_pw",)
+        models[name] = BackendCostModel.fit(name, shapes, tf, tv, drop=drop)
 
     return PlannerProfile(
         models=models,

@@ -31,6 +31,7 @@ import numpy as np
 __all__ = [
     "WorkloadShape",
     "est_scene_tris",
+    "est_pad_waste",
     "FEATURE_NAMES",
     "featurize",
     "CostModel",
@@ -48,6 +49,23 @@ def est_scene_tris(n_facilities: int, k: int) -> float:
     return float(min(max(n_facilities - 1, 1) * 3.0, 6.0 * k + 24.0))
 
 
+def est_pad_waste(n_users: int, grid_g: int = 64) -> float:
+    """Pre-measurement estimate of the cell-bucketing pad-waste ratio.
+
+    Assumes uniformly spread users: ``min(G², |U|)`` occupied cells, so
+    the mean occupancy and :func:`repro.kernels.grid_raycast.
+    auto_cell_block`'s [8, 256] power-of-two clamp give ``padded ≈
+    occupied · block``.  A pure function of |U| (perfectly collinear with
+    ``log_u``), so fits that only ever see this fallback must ``drop``
+    the ``log_pw`` feature; calibration passes the *measured* ratio of
+    the actual workload instead."""
+    u = max(int(n_users), 1)
+    occ = min(int(grid_g) * int(grid_g), u)
+    mean = max(int(np.ceil(u / occ)), 1)
+    block = int(min(256, max(8, 1 << int(np.ceil(np.log2(mean))))))
+    return max(occ * block / u, 1.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadShape:
     """The planner's view of one (possibly batched) query workload.
@@ -55,7 +73,11 @@ class WorkloadShape:
     ``m_tris`` is the per-query scene triangle count when known (scenes
     already built); ``None`` prices the pre-scene estimate.  ``cache_hit``
     marks the filter phase as already amortized (scene cache / prepared-
-    batch LRU), so only verify cost is charged.
+    batch LRU), so only verify cost is charged.  ``pad_waste`` is the
+    measured cell-bucketing occupancy ratio (padded user rows / real
+    rows, ≥ 1) when the caller knows it — the verify cost of the
+    grid-pallas family tracks the padded total, not raw |U|; ``None``
+    prices the uniform-density estimate.
     """
 
     n_facilities: int
@@ -64,11 +86,17 @@ class WorkloadShape:
     q: int = 1
     m_tris: float | None = None
     cache_hit: bool = False
+    pad_waste: float | None = None
 
     def m(self) -> float:
         if self.m_tris is not None:
             return max(float(self.m_tris), 1.0)
         return est_scene_tris(self.n_facilities, self.k)
+
+    def pw(self) -> float:
+        if self.pad_waste is not None:
+            return max(float(self.pad_waste), 1.0)
+        return est_pad_waste(self.n_users)
 
 
 #: Deliberately minimal: in log space any product term (Q·U, Q·U·m, …) is
@@ -84,6 +112,7 @@ FEATURE_NAMES: tuple[str, ...] = (
     "log_k",
     "log_q",
     "log_m",
+    "log_pw",
 )
 
 
@@ -93,8 +122,9 @@ def featurize(shape: WorkloadShape) -> np.ndarray:
     k = float(max(shape.k, 1))
     q = float(max(shape.q, 1))
     m = shape.m()
+    pw = shape.pw()
     return np.array(
-        [1.0, np.log(f), np.log(u), np.log(k), np.log(q), np.log(m)],
+        [1.0, np.log(f), np.log(u), np.log(k), np.log(q), np.log(m), np.log(pw)],
         dtype=np.float64,
     )
 
@@ -128,16 +158,54 @@ class CostModel:
         should not have to discover (a geometry-free backend cannot depend
         on the scene size ``m``; leaving the column in lets it steal
         correlated weight from |F| and wreck extrapolation).
+
+        All non-``const`` exponents are constrained **non-negative**: no
+        backend gets cheaper as the workload grows, so a negative exponent
+        is always a collinearity artifact of the calibration grid (e.g.
+        ``log_u`` stealing weight from the padded-occupancy term), and it
+        extrapolates catastrophically — the PR-5 bench misrouted
+        steady-state verify away from ``grid-pallas-ref`` exactly this
+        way.  Enforced by an active-set loop: refit with every negative
+        exponent pinned to 0 until none remain (NNLS on this feature
+        count in ≤ ``len(FEATURE_NAMES)`` solves).
+
+        ``log_q`` is additionally capped at **1**: a batched dispatch can
+        always fall back to looping the single-query path ``q`` times, so
+        per-batch cost is at most linear in ``q`` — a fitted exponent
+        above 1 is the same kind of collinearity artifact (it makes the
+        planner punish exactly the backends whose batch economies it
+        should be exploiting).  Capped features contribute a fixed offset
+        of ``1.0 x log_q`` to the target and leave the active set.
         """
-        A = np.stack([featurize(s) for s in shapes])
-        keep = np.array([name not in drop for name in FEATURE_NAMES])
-        Ak = A[:, keep]
         y = np.log(np.maximum(np.asarray(times_s, np.float64), 1e-6))
-        n = Ak.shape[1]
-        ck = np.linalg.solve(Ak.T @ Ak + ridge * np.eye(n), Ak.T @ y)
-        coef = np.zeros(len(FEATURE_NAMES))
-        coef[keep] = ck
-        return cls(coef=coef)
+        A = np.stack([featurize(s) for s in shapes])
+        pinned = set(drop)
+        capped: set[str] = set()
+        while True:
+            keep = np.array(
+                [name not in pinned and name not in capped for name in FEATURE_NAMES]
+            )
+            y_eff = y
+            for name in capped:
+                y_eff = y_eff - A[:, FEATURE_NAMES.index(name)]
+            Ak = A[:, keep]
+            n = Ak.shape[1]
+            ck = np.linalg.solve(Ak.T @ Ak + ridge * np.eye(n), Ak.T @ y_eff)
+            coef = np.zeros(len(FEATURE_NAMES))
+            coef[keep] = ck
+            for name in capped:
+                coef[FEATURE_NAMES.index(name)] = 1.0
+            negative = [
+                name
+                for name, c in zip(FEATURE_NAMES, coef)
+                if name != "const" and c < 0.0
+            ]
+            superlinear_q = coef[FEATURE_NAMES.index("log_q")] > 1.0
+            if not negative and not superlinear_q:
+                return cls(coef=coef)
+            pinned.update(negative)
+            if superlinear_q:
+                capped.add("log_q")
 
     def to_json(self) -> dict:
         return {"coef": [float(c) for c in self.coef]}

@@ -42,7 +42,10 @@ __all__ = [
     "load_runner_profile",
 ]
 
-PROFILE_VERSION = 1
+#: v2: the feature vector gained ``log_pw`` (cell-bucketing pad-waste
+#: ratio) and fits constrain exponents non-negative — v1 coefficient
+#: vectors neither parse nor price correctly, so they are rejected.
+PROFILE_VERSION = 2
 
 #: Environment override for where profiles live by default.
 _PROFILE_ENV = "REPRO_PLANNER_PROFILE"
@@ -279,15 +282,22 @@ def _prior_times(name: str, s: WorkloadShape) -> tuple[float, float]:
         slow = 40.0 if name == "dense" else 1.0  # interpret-mode penalty
         return q * scene, slow * (3e-4 + 4e-9 * q * u * m)
     if name == "grid":
-        return q * (scene + 2e-3 + 4e-5 * m), 5e-4 + 1.2e-8 * q * u * max(m / 6.0, 4.0)
+        # gather-bound kernel: every user pays the PADDED max list width
+        # (the [Q, N, L, 3, 3] gather), so verify scales with u·pw like
+        # the bucketed family — only the constant differs
+        return (
+            q * (scene + 2e-3 + 4e-5 * m),
+            5e-4 + 1.2e-8 * q * (u * s.pw()) * max(m / 6.0, 4.0),
+        )
     if name in ("grid-pallas", "grid-pallas-ref"):
         # cell-bucketed kernel: the user->cell sort is shared across the
         # batch (u-term outside q), plane packing rides the index build;
-        # verify drops the per-user gather to per-cell plane staging
+        # verify drops the per-user gather to per-cell plane staging but
+        # pays for PADDED rows — u·pw, not u (occupancy feature)
         slow = 40.0 if name == "grid-pallas" else 1.0  # interpret-mode penalty
         return (
             q * (scene + 2e-3 + 5e-5 * m) + 3e-8 * u,
-            slow * (5e-4 + 4e-9 * q * u * max(m / 6.0, 4.0)),
+            slow * (5e-4 + 4e-9 * q * (u * s.pw()) * max(m / 6.0, 4.0)),
         )
     if name == "bvh":
         # per-lane while_loop under vmap: SIMD-hostile, pays ~O(m) per user
@@ -318,18 +328,31 @@ def builtin_profile() -> PlannerProfile:
     global _builtin
     if _builtin is not None:
         return _builtin
+    # pad_waste varies independently of u (clustered regimes) so the
+    # grid-pallas family's log_pw exponent is identifiable; None exercises
+    # the uniform-density fallback the planner uses pre-measurement
     shapes = [
-        WorkloadShape(f, u, k, q, m_tris=mt)
+        WorkloadShape(f, u, k, q, m_tris=mt, pad_waste=pw)
         for f in (30, 100, 1_000, 10_000)
         for u in (1_000, 20_000, 1_000_000)
         for k in (1, 10, 100)
         for q in (1, 16, 128)
         for mt in (None, est_scene_tris(f, k) * 2.0)
+        for pw in (None, 4.0, 16.0)
     ]
     models = {}
     for name in _PRIOR_BACKENDS:
         times = np.array([_prior_times(name, s) for s in shapes])
-        models[name] = BackendCostModel.fit(name, shapes, times[:, 0], times[:, 1])
+        # only the grid family pays pad waste; everyone else pins the
+        # exponent to zero instead of aliasing it against log_u
+        drop = (
+            ()
+            if name in ("grid", "grid-pallas", "grid-pallas-ref")
+            else ("log_pw",)
+        )
+        models[name] = BackendCostModel.fit(
+            name, shapes, times[:, 0], times[:, 1], drop=drop
+        )
     _builtin = PlannerProfile(
         models=models,
         created_at=0.0,

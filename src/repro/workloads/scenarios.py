@@ -178,7 +178,7 @@ def calibration_grid(fast: bool = True, seed: int = 0) -> list[Scenario]:
             for q in (1, 8)
         ]
     dists = ("road", "clustered", "uniform")
-    return [
+    scens = [
         Scenario(
             f"cal_F{f}_U{u}_k{k}_Q{q}",
             f, u, k, q,
@@ -187,3 +187,17 @@ def calibration_grid(fast: bool = True, seed: int = 0) -> list[Scenario]:
         )
         for i, (f, u, k, q) in enumerate(spec)
     ]
+    # pad-waste identification pairs: identical (F, U, k, Q); ONLY the
+    # user distribution — hence the cell-bucketing pad waste — differs.
+    # The rotation above varies pw only alongside the size features, so
+    # without these pairs log_pw is collinear with log_u/log_m and the
+    # non-negative fit pins the grid family's occupancy exponent to zero.
+    for f, u, k, q in ((200, 6_000, 8, 8), (500, 12_000, 8, 4)):
+        for d in ("uniform", "clustered"):
+            scens.append(
+                Scenario(
+                    f"cal_pw_{d}_F{f}_U{u}", f, u, k, q,
+                    distribution=d, seed=seed + 101,
+                )
+            )
+    return scens

@@ -153,11 +153,20 @@ def test_user_only_updates_keep_scenes_and_scatter():
     assert not rep.rect_changed
     assert rep.scenes_survived == 3 and rep.scenes_dropped == 0
     assert rep.users_scattered
-    h0 = dyn.scene_cache.hits
+    # user-only move: the prepared batch is carried, re-pointed at the
+    # scattered arrays — the repeat workload skips the whole filter phase
+    assert rep.batches_carried >= 1
+    b0 = dyn.stats.batch_cache_hits
     r = dyn.query_batch(qs, 4)
-    assert dyn.scene_cache.hits == h0 + 3  # survivors actually hit
+    assert dyn.stats.batch_cache_hits == b0 + 1
     cold = RkNNEngine(dyn.facilities, dyn.users, RkNNConfig(backend="dense-ref"))
     np.testing.assert_array_equal(r.masks, cold.query_batch(qs, 4).masks)
+    # a new batch composition misses the prepared LRU but the surviving
+    # scenes still hit the scene cache
+    h0 = dyn.scene_cache.hits
+    r2 = dyn.query_batch(qs[:2], 4)
+    assert dyn.scene_cache.hits == h0 + 2
+    np.testing.assert_array_equal(r2.masks, cold.query_batch(qs[:2], 4).masks)
 
 
 def test_far_facility_change_survives_certificate():
@@ -182,7 +191,7 @@ def test_near_jitter_refits_scene_and_indexes():
     for backend in ("grid", "bvh"):
         dyn = DynamicEngine(F, U, RkNNConfig(backend=backend))
         dyn.query(5, 6)
-        scene = dyn._build_scene(5, 6, dyn.rect)
+        scene = dyn._build_scene(dyn._snap, 5, 6, dyn.rect)
         kept = np.flatnonzero(scene.keep)
         kept = kept[kept >= 4][:2]  # never jitter the hull-pinning corners
         jit = dyn.facilities[kept] + 1e-4

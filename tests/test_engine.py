@@ -128,15 +128,17 @@ def test_batch_cache_collapses_repeat_workload():
 def test_batch_reuses_memoized_scene_indexes():
     """Scene-cache hits carry their grid/BVH index across batches: a second
     batch with a different composition must not rebuild indexes for scenes
-    it already saw (the per-scene memo is keyed on the scene object)."""
+    it already saw (the snapshot's index memo is keyed on the scene
+    object)."""
     F, U, rng = _instance(97, M=80)
     eng = RkNNEngine(F, U, RkNNConfig(backend="grid", batch_cache=0))
     eng.query_batch([1, 2, 3], 4)
     scene1 = eng.scene_cache.get_or_build(F, 1, 4, eng.rect)[0]
-    memo = getattr(scene1, "_engine_indexes")
-    assert ("grid", eng.config.grid_g) in memo
+    memo = eng._snap.index_memo.peek(scene1)
+    assert memo is not None and ("grid", eng.config.grid_g) in memo
     idx_before = memo[("grid", eng.config.grid_g)]
     res = eng.query_batch([1, 5], 4)  # new composition, scene 1 cached
+    memo = eng._snap.index_memo.peek(scene1)
     assert memo[("grid", eng.config.grid_g)] is idx_before
     np.testing.assert_array_equal(
         res.masks, rt_rknn_query_batch(F, U, [1, 5], 4, backend="grid").masks

@@ -182,16 +182,18 @@ def test_dynamic_updates_stay_exact(name):
 
 
 def test_bucket_cache_reused_across_batches():
-    """The user→cell sort is computed once per (users, rect, G) and reused
-    by later batches over different query sets."""
+    """The user→cell sort is computed once per (users, rect, G) — memoized
+    on the engine snapshot — and reused by later batches over different
+    query sets."""
     rng = np.random.default_rng(5)
     F = rng.random((30, 2))
     U = rng.random((400, 2))
     eng = RkNNEngine(F, U, RkNNConfig(backend="grid-pallas-ref"))
-    b = get_backend("grid-pallas-ref")
     eng.query_batch([1, 2], 4)
-    key_hits = [k for k in b._bucket_cache if k[1] == len(U)]
+    memo = eng._snap.kernel_memo
+    key_hits = [k for k in memo.keys() if k[0] == "gp-buckets" and k[2] == len(U)]
     assert key_hits
-    marker = b._bucket_cache[key_hits[0]]
+    marker = memo.get(key_hits[0])
+    assert marker is not None
     eng.query_batch([3, 4], 4)  # different queries, same user sort
-    assert b._bucket_cache[key_hits[0]] is marker
+    assert memo.get(key_hits[0]) is marker

@@ -340,6 +340,102 @@ def test_est_scene_tris_monotone_and_capped():
     assert s.m() == 17.0
 
 
+def test_pad_waste_measured_vs_estimated():
+    """``measured_pad_waste`` is the exact bucketing ratio (sparse uniform
+    scatters pay block-granularity padding, dense clusters amortize it);
+    ``est_pad_waste`` is the shape-only fallback the planner prices with
+    before any user array exists."""
+    from repro.core.geometry import Rect
+    from repro.kernels.grid_raycast import measured_pad_waste
+    from repro.planner.models import est_pad_waste
+
+    rect = Rect(0.0, 0.0, 1.0, 1.0)
+    rng = np.random.default_rng(9)
+    sparse = rng.random((1_000, 2))  # ~1 user per occupied 64x64 cell
+    dense = np.tile(rng.random((10, 2)), (100, 1))  # 10 fat cells
+    pw_sparse = measured_pad_waste(sparse[:, 0], sparse[:, 1], rect, 64)
+    pw_dense = measured_pad_waste(dense[:, 0], dense[:, 1], rect, 64)
+    assert pw_sparse > pw_dense >= 1.0  # padding hurts sparse occupancy
+    # the fallback matches the measurement in the regime it models
+    assert est_pad_waste(1_000) == pytest.approx(pw_sparse, rel=0.35)
+    # shape echoes: explicit measurement wins, fallback otherwise
+    assert WorkloadShape(10, 500, 1, 1, pad_waste=3.5).pw() == 3.5
+    assert WorkloadShape(10, 500, 1, 1).pw() == est_pad_waste(500)
+
+
+def test_fit_recovers_pad_waste_exponent_and_stays_nonnegative():
+    """t = c · U · pw fits the occupancy exponent when pad_waste varies
+    independently of U, and the active-set constraint pins any
+    physically-nonsensical negative exponent to zero instead of letting
+    extrapolation invert it."""
+    rng = np.random.default_rng(11)
+    shapes = [
+        WorkloadShape(
+            int(f), int(u), int(k), 1, m_tris=9.0, pad_waste=float(pw)
+        )
+        for f, u, k, pw in zip(
+            rng.integers(10, 1000, 30),
+            rng.integers(100, 10000, 30),
+            rng.integers(1, 64, 30),
+            rng.uniform(1.0, 30.0, 30),
+        )
+    ]
+    times = np.array([1e-7 * s.n_users * s.pw() for s in shapes])
+    model = CostModel.fit(shapes, times, ridge=1e-9)
+    assert model.coef[FEATURE_NAMES.index("log_pw")] == pytest.approx(1.0, abs=0.05)
+    far = WorkloadShape(500, 50_000, 8, 1, m_tris=9.0, pad_waste=64.0)
+    np.testing.assert_allclose(
+        model.predict_s(far), 1e-7 * far.n_users * far.pw(), rtol=0.1
+    )
+    # a cost DECREASING in k would extrapolate to free work at large k;
+    # the constrained fit zeroes it (and every other exponent stays >= 0)
+    times_dec = np.array([1e-6 * s.n_users / s.k for s in shapes])
+    model_dec = CostModel.fit(shapes, times_dec)
+    assert model_dec.coef[FEATURE_NAMES.index("log_k")] == 0.0
+    assert all(c >= 0.0 for c in model_dec.coef[1:])
+
+
+def test_observe_converges_and_flips_gp_ref_misroute():
+    """Online convergence (the BENCH_5 misroute, distilled): a profile
+    that underprices ``grid`` routes everything to it; feeding the
+    planner its own closed-out plans (predicted vs. the true cost, where
+    ``grid-pallas-ref`` actually wins) must flip ``select()`` to
+    grid-pallas-ref and SETTLE there, with the surviving prediction
+    calibrated to the observed cost."""
+
+    def const_model(name, filter_s, verify_s):
+        f = np.zeros(len(FEATURE_NAMES))
+        v = np.zeros(len(FEATURE_NAMES))
+        f[0], v[0] = np.log(filter_s), np.log(verify_s)
+        return BackendCostModel(name, CostModel(f), CostModel(v))
+
+    set_active_profile(
+        PlannerProfile(
+            models={
+                "grid": const_model("grid", 5e-5, 5e-5),  # underpriced
+                "grid-pallas-ref": const_model("grid-pallas-ref", 2e-3, 3e-3),
+            }
+        )
+    )
+    true_s = {"grid": 8e-3, "grid-pallas-ref": 2e-3}
+    planner = PlannerBackend()
+    cands = ("grid", "grid-pallas-ref")
+    shape = WorkloadShape(100, 5_000, 8, 16, m_tris=40.0, pad_waste=2.0)
+    chosen = []
+    for _ in range(40):
+        choice, pred, _ = planner.select(shape, cands)
+        chosen.append(choice)
+        planner.observe(
+            {"mode": "single", "backend": choice, "predicted_s": pred,
+             "observed_s": true_s[choice]}
+        )
+    assert chosen[0] == "grid"  # the misprice wins at first...
+    assert chosen[-10:] == ["grid-pallas-ref"] * 10  # ...then it settles
+    _, pred, _ = planner.select(shape, cands)
+    assert abs(np.log(pred / true_s["grid-pallas-ref"])) < 0.5  # calibrated
+    assert planner.n_recal_nudges == 40
+
+
 # ------------------------------------------------------------- calibration
 def test_calibration_fit_and_roundtrip(tmp_path):
     """End-to-end: micro-benchmark tiny shapes, fit, save, load, predict."""
