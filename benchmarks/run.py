@@ -12,14 +12,21 @@ trajectory points (``BENCH_*.json``) without re-parsing CSV.
 ``--backend`` is forwarded to the benches that take one (currently the
 planner's ``scenario_sweep``, which grades that backend against the fixed
 set).
+``--trend`` prints the committed ``benchmarks/results/BENCH_*.json``
+trajectory (one CSV row per recorded measurement, tagged with its PR
+number) instead of running anything — the cross-PR performance story in
+one grep-able stream.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import inspect
 import json
+import os
 import platform
+import re
 import sys
 import time
 
@@ -42,7 +49,43 @@ BENCHES = [
     ("scenario_sweep", bench_rknn.scenario_sweep),
     ("update_throughput", bench_rknn.update_throughput),
     ("mono", bench_rknn.mono_queries),
+    ("sharded_scaling", bench_rknn.sharded_scaling),
 ]
+
+
+def print_trend() -> None:
+    """The committed BENCH_*.json trajectory as one CSV stream.
+
+    Each committed file is one PR's acceptance measurement; printing them
+    in PR order makes per-artefact trajectories (`grep sharded_`,
+    `grep scenario_aggregate`) readable across the repo's history."""
+    results = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+    files = sorted(
+        glob.glob(os.path.join(results, "BENCH_*.json")),
+        key=lambda p: int(re.search(r"BENCH_(\d+)", p).group(1)),
+    )
+    if not files:
+        print(f"# no committed BENCH_*.json under {results}", file=sys.stderr)
+        return
+    print("pr,bench,name,us_per_call,derived")
+    for path in files:
+        with open(path) as f:
+            payload = json.load(f)
+        pr = int(re.search(r"BENCH_(\d+)", path).group(1))
+        meta = payload.get("meta", {})
+        print(
+            f"# BENCH_{pr}: scale={meta.get('scale')} "
+            f"wall={meta.get('wall_s')}s only={meta.get('only')}",
+            file=sys.stderr,
+        )
+        for r in payload.get("rows", []):
+            derived = str(r.get("derived", "")).replace(",", ";")
+            print(
+                f"{pr},{r.get('bench', '?')},{r['name']},"
+                f"{float(r['us_per_call']):.1f},{derived}"
+            )
+        for e in payload.get("errors", []):
+            print(f"{pr},{e.get('bench', '?')}_ERROR,,0,{e.get('error')}")
 
 
 def main() -> None:
@@ -66,7 +109,16 @@ def main() -> None:
         help="forwarded to benches that accept it (update_throughput: "
         "measure MVCC serving latency under a concurrent update stream)",
     )
+    ap.add_argument(
+        "--trend",
+        action="store_true",
+        help="print the committed benchmarks/results/BENCH_*.json "
+        "trajectory as CSV and exit (runs nothing)",
+    )
     args = ap.parse_args()
+    if args.trend:
+        print_trend()
+        return
 
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

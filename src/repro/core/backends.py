@@ -82,6 +82,7 @@ __all__ = [
     "available_backends",
     "concrete_backends",
     "timeable_backends",
+    "stack_cell_planes",
     "DenseBackend",
     "DenseRefBackend",
     "GridBackend",
@@ -416,6 +417,44 @@ class GridBackend(Backend):
 # --------------------------------------------------------------------------
 
 
+def stack_cell_planes(
+    planes: list[np.ndarray], *, lane_pad: int = 1, compact: bool = False
+) -> np.ndarray:
+    """Stack per-scene packed coefficient planes ``[n_cells, 3, 3, L_i]``
+    into one ``[Q, n_cells, 3, 3, L]`` batch table.
+
+    Per-scene lane widths ``L_i`` are heterogeneous (each scene pads to
+    its own longest cell list); short planes degenerate-pad with the
+    third coefficient row at ``-1`` — a plane no point is ever inside —
+    so padding lanes can never contribute a hit.
+
+    ``compact=True`` additionally trims dead lanes: ``L`` becomes the
+    longest *live* lane across the stack (rounded up to ``lane_pad`` for
+    the compiled kernel's tile constraint) instead of the longest padded
+    width.  This is the user-axis shard win — a shard whose occupied
+    cells carry short candidate lists ships and evaluates proportionally
+    fewer ``[BU x L]`` edge tests.
+    """
+    if compact:
+        L = 1
+        for p in planes:
+            live = np.flatnonzero(np.any(p[:, :, 2, :] != -1.0, axis=(0, 1)))
+            if live.size:
+                L = max(L, int(live[-1]) + 1)
+        pad = max(int(lane_pad), 1)
+        L = -(-L // pad) * pad
+    else:
+        L = max(p.shape[-1] for p in planes)
+        if all(p.shape[-1] == L for p in planes):
+            return np.stack(planes)
+    out = np.zeros((len(planes),) + planes[0].shape[:-1] + (L,), np.float32)
+    out[:, :, :, 2, :] = -1.0  # degenerate pad (never inside)
+    for i, p in enumerate(planes):
+        c = min(L, p.shape[-1])
+        out[i, ..., :c] = p[..., :c]
+    return out
+
+
 @register_backend
 class GridPallasBackend(GridBackend):
     """Cell-bucketed grid counting via the scalar-prefetch Pallas kernel.
@@ -582,14 +621,7 @@ class GridPallasBackend(GridBackend):
             req.xs, req.ys, rect, G, memo=req.memo
         )
         planes = [self._planes_for(g)[occ] for g in indexes]  # [n_occ, 3, 3, L]
-        L = max(p.shape[-1] for p in planes)
-        if all(p.shape[-1] == L for p in planes):
-            planes_q = np.stack(planes)
-        else:
-            planes_q = np.zeros((len(planes),) + planes[0].shape[:-1] + (L,), np.float32)
-            planes_q[:, :, :, 2, :] = -1.0  # degenerate pad (never inside)
-            for i, p in enumerate(planes):
-                planes_q[i, ..., : p.shape[-1]] = p
+        planes_q = stack_cell_planes(planes)
         base_q = np.stack([g.base[occ] for g in indexes]).astype(np.int32)
         return (xs_s, ys_s, order, ranks, block, base_q, planes_q)
 

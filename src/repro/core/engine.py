@@ -110,6 +110,13 @@ class EngineStats:
     ``auto`` backend: per-backend dispatch counts and the running
     predicted-vs-observed cost totals (the planner's calibration error is
     ``planner_obs_s / planner_pred_s`` drifting from 1).
+
+    The ``shard_*`` fields only move on a sharded engine
+    (:class:`repro.shard.ShardedEngine`): cumulative per-shard filter
+    (per-shard bucketing/stacking) and verify (per-shard dispatch) time,
+    indexed by shard, and the lifetime imbalance ratio
+    ``max(shard_verify) / mean(shard_verify)`` — 1.0 is perfectly
+    balanced; clustered user distributions drift above it.
     """
 
     n_queries: int = 0
@@ -122,6 +129,9 @@ class EngineStats:
     planner_pred_s: float = 0.0
     planner_obs_s: float = 0.0
     planner_recal_nudges: int = 0
+    shard_filter_s: list = dataclasses.field(default_factory=list)
+    shard_verify_s: list = dataclasses.field(default_factory=list)
+    shard_imbalance: float = 1.0
 
 
 def _next_pow2(n: int) -> int:
@@ -451,6 +461,23 @@ class RkNNEngine:
             )
         return store[key]
 
+    def _workload_shards(self) -> int:
+        """Shard count the planner prices workloads at (the ``log_s``
+        feature).  1 on single-process engines; ``ShardedEngine``
+        overrides with its mesh size."""
+        return 1
+
+    def _prepare_batch(self, backend: Backend, req: BatchRequest):
+        """Backend stacking for one batch, honoring a dispatch that owns
+        its own prepare step (``req.dispatch.prepare``): the sharded
+        dispatch builds *per-shard* prepared state (cell buckets, lane-
+        compacted planes) that the plain ``Backend.prepare_batch`` —
+        which sees no partition — cannot."""
+        prep = getattr(req.dispatch, "prepare", None)
+        if prep is not None:
+            return prep(backend, req)
+        return backend.prepare_batch(req)
+
     def _batch_cache_get(self, snap: EngineSnapshot, key):
         """Prepared-batch lookup (None key → miss); counts a hit in the
         stats.  Lock-free — see :class:`~repro.core.snapshot.LruCache`."""
@@ -538,7 +565,7 @@ class RkNNEngine:
             dispatch=dispatch,
             memo=snap.kernel_memo,
         )
-        prepared = backend.prepare_batch(req)
+        prepared = self._prepare_batch(backend, req)
         self._batch_cache_put(snap, cache_key, (req, prepared, scenes))
         return req, prepared, scenes
 
@@ -596,6 +623,7 @@ class RkNNEngine:
             1,
             cache_hit=amortized or self._scene_cached(snap, q_build, k, rect),
             pad_waste=snap.pad_waste(rect, self.config.grid_g),
+            shards=self._workload_shards(),
         )
         choice, pred, costs = planner.select(shape)
         plan = {
@@ -846,7 +874,7 @@ class RkNNEngine:
                 dispatch=dispatch,
                 memo=snap.kernel_memo,
             )
-            prepared = b.prepare_batch(req)
+            prepared = self._prepare_batch(b, req)
             self._batch_cache_put(snap, cache_key, (req, prepared, sub))
         t1 = time.perf_counter()
         counts = b.count_batch(req, prepared)
@@ -913,7 +941,8 @@ class RkNNEngine:
                 self._scene_cached(snap, q, k, rect) for q in queries
             )
             batch_shape = WorkloadShape(
-                n_f, n_u, k, q_n, cache_hit=amortized, pad_waste=pad_w
+                n_f, n_u, k, q_n, cache_hit=amortized, pad_waste=pad_w,
+                shards=self._workload_shards(),
             )
             ranked = planner.rank(batch_shape)
             plan = {
@@ -944,6 +973,7 @@ class RkNNEngine:
                             m_tris=s.n_tris,
                             cache_hit=True,
                             pad_waste=pad_w,
+                            shards=self._workload_shards(),
                         )
                         for s in scenes
                     ]
@@ -1084,6 +1114,7 @@ class RkNNEngine:
                             pad_waste=snap.pad_waste(
                                 snap.rect, self.config.grid_g
                             ),
+                            shards=self._workload_shards(),
                         )
                         choice, pred, costs = b.select(shape)
                         plan = {

@@ -181,6 +181,7 @@ class EngineSnapshot:
         "mesh_xs",
         "mesh_ys",
         "mesh_n",
+        "shard_state",
         "_rect",
         "_hull",
         "_fp",
@@ -214,6 +215,10 @@ class EngineSnapshot:
         self.batch_cache = LruCache(batch_capacity)
         self.mesh_xs = self.mesh_ys = None
         self.mesh_n = 0
+        #: Per-shard replica views of this version's users (built lazily by
+        #: ShardedEngine, swapped in as ONE object so a reader never sees a
+        #: mixed-version shard set — the version-lockstep rule).
+        self.shard_state = None
         self._rect = rect
         self._hull: tuple[np.ndarray, np.ndarray] | None = None
         self._fp: int | None = None

@@ -16,7 +16,15 @@ import threading
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["set_mesh", "get_mesh", "active_mesh", "constrain", "dp_axes", "logical_to_spec"]
+__all__ = [
+    "set_mesh",
+    "get_mesh",
+    "active_mesh",
+    "constrain",
+    "dp_axes",
+    "user_axes",
+    "logical_to_spec",
+]
 
 _state = threading.local()
 
@@ -45,6 +53,16 @@ def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in names)
 
 
+def user_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The axes the RkNN *user* population shards over: a dedicated
+    ``'users'`` axis when the mesh has one (the serving mesh of
+    :mod:`repro.shard`), else the data-parallel group (training-style
+    meshes reuse their DP axes for the user rows)."""
+    if "users" in mesh.axis_names:
+        return ("users",)
+    return dp_axes(mesh)
+
+
 def logical_to_spec(mesh: Mesh, logical: tuple) -> P:
     """Map logical axis names to a PartitionSpec on the active mesh."""
     out = []
@@ -53,6 +71,9 @@ def logical_to_spec(mesh: Mesh, logical: tuple) -> P:
             out.append(None)
         elif ax == "data":
             axes = dp_axes(mesh)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        elif ax == "users":
+            axes = user_axes(mesh)
             out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
         elif ax == "batch_all":  # every mesh axis as one DP group (dp_only)
             axes = dp_axes(mesh) + tuple(a for a in ("model",) if a in mesh.axis_names)

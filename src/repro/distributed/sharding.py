@@ -37,7 +37,22 @@ __all__ = [
     "cache_shardings",
     "replicated",
     "tree_shardings",
+    "user_shard_bounds",
 ]
+
+
+def user_shard_bounds(n_users: int, n_shards: int) -> np.ndarray:
+    """``[S+1]`` int64 balanced contiguous cut points of ``n_users`` rows.
+
+    The canonical user-axis partition shared by :mod:`repro.shard` and
+    its equivalence tests: shard ``s`` owns rows ``[bounds[s],
+    bounds[s+1])`` of whatever ordering the caller shards (the sharded
+    engine applies it to the *spatially sorted* permutation, so each
+    shard covers a contiguous region of grid cells).  Balanced to within
+    one row, monotone, ``bounds[0] == 0`` and ``bounds[S] == n_users``.
+    """
+    s = max(int(n_shards), 1)
+    return (np.arange(s + 1, dtype=np.int64) * int(n_users)) // s
 
 
 def axis_size(mesh: Mesh, logical: Any) -> int:

@@ -387,17 +387,21 @@ class DynamicEngine(RkNNEngine):
         report: UpdateReport,
     ) -> None:
         """Carry prepared batches into the new snapshot for user-only
-        *move* deltas.
+        deltas (moves, inserts, and hull-stable deletes alike).
 
         The prepared state of the dense/grid/bvh families is a pure
         function of the scenes (which a user-only delta cannot touch), so
         the expensive stacking survives verbatim — only the request's
-        user-side references are re-pointed at the scattered device
-        arrays.  Backends that bake user coordinates into their prepared
-        state (``prepared_carries_users`` — the grid-pallas cell sort)
-        are rebuilt lazily.  Facility deltas, rect changes, and |U| shape
-        changes start the new version cold: their keys or row counts are
-        stale wholesale.
+        user-side references are re-pointed at the new snapshot's device
+        arrays: the scattered ones for a pure move, the lazily re-uploaded
+        (grown or shrunk) ones for an insert/delete.  The count dispatch
+        sizes its ``[Q, N]`` output from those arrays at call time, so a
+        changed |U| flows through without touching the prepared stack.
+        Backends that bake user coordinates into their prepared state
+        (``prepared_carries_users`` — the grid-pallas cell sort) are
+        rebuilt lazily.  Facility deltas and rect changes (which an
+        out-of-hull insert triggers) still start the new version cold:
+        their scenes or keys are stale wholesale.
         """
         if batch.touches_facilities or rect_changed:
             return
@@ -407,12 +411,10 @@ class DynamicEngine(RkNNEngine):
                 new.batch_cache.put(key, value)
                 report.batches_carried += 1
             return
-        if len(batch.user_insert) or len(batch.user_delete):
-            return  # |U| changed: every prepared row count is stale
         for key, value in old.batch_cache.items():
             if key[0] == "auto-plan":
                 # assignment + scenes are user-count-independent; prices
-                # shift negligibly under a pure move
+                # shift negligibly under an incremental user delta
                 new.batch_cache.put(key, value)
                 report.batches_carried += 1
                 continue

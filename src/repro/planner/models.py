@@ -33,6 +33,7 @@ __all__ = [
     "est_scene_tris",
     "est_pad_waste",
     "FEATURE_NAMES",
+    "SIGN_FREE_FEATURES",
     "featurize",
     "CostModel",
     "BackendCostModel",
@@ -87,6 +88,9 @@ class WorkloadShape:
     m_tris: float | None = None
     cache_hit: bool = False
     pad_waste: float | None = None
+    #: User-axis shard count the workload is served at
+    #: (:class:`repro.shard.ShardedEngine`); 1 = single-process.
+    shards: int = 1
 
     def m(self) -> float:
         if self.m_tris is not None:
@@ -113,7 +117,16 @@ FEATURE_NAMES: tuple[str, ...] = (
     "log_q",
     "log_m",
     "log_pw",
+    "log_s",
 )
+
+#: Features whose fitted exponent may legitimately be negative.  The
+#: non-negativity active set below encodes "no backend gets cheaper as
+#: the workload grows" — but ``log_s`` is a *resource* feature, not a
+#: size feature: more shards is supposed to make verify cheaper, so its
+#: honest exponent is ≤ 0 and pinning it to zero would erase exactly the
+#: scaling the feature exists to price.
+SIGN_FREE_FEATURES: frozenset = frozenset({"log_s"})
 
 
 def featurize(shape: WorkloadShape) -> np.ndarray:
@@ -123,8 +136,18 @@ def featurize(shape: WorkloadShape) -> np.ndarray:
     q = float(max(shape.q, 1))
     m = shape.m()
     pw = shape.pw()
+    s = float(max(shape.shards, 1))
     return np.array(
-        [1.0, np.log(f), np.log(u), np.log(k), np.log(q), np.log(m), np.log(pw)],
+        [
+            1.0,
+            np.log(f),
+            np.log(u),
+            np.log(k),
+            np.log(q),
+            np.log(m),
+            np.log(pw),
+            np.log(s),
+        ],
         dtype=np.float64,
     )
 
@@ -198,7 +221,7 @@ class CostModel:
             negative = [
                 name
                 for name, c in zip(FEATURE_NAMES, coef)
-                if name != "const" and c < 0.0
+                if name != "const" and name not in SIGN_FREE_FEATURES and c < 0.0
             ]
             superlinear_q = coef[FEATURE_NAMES.index("log_q")] > 1.0
             if not negative and not superlinear_q:
@@ -213,6 +236,15 @@ class CostModel:
     @classmethod
     def from_json(cls, obj: dict) -> "CostModel":
         coef = np.asarray(obj["coef"], np.float64)
+        if coef.ndim == 1 and coef.shape[0] == len(FEATURE_NAMES) - 1:
+            # profile fitted before the newest trailing feature existed
+            # (``log_s`` landed after the committed runner profiles):
+            # exponent 0 on the missing feature prices it as neutral,
+            # which is exactly what a fit with no variation would return.
+            # Only the one-feature-behind schema is migrated — anything
+            # shorter is a genuinely stale/corrupt profile and still
+            # rejected below.
+            coef = np.concatenate([coef, np.zeros(1)])
         if coef.shape != (len(FEATURE_NAMES),):
             raise ValueError(
                 f"cost-model coefficient vector has shape {coef.shape}, "

@@ -1,0 +1,31 @@
+"""User-axis SPMD sharded RkNN serving.
+
+Quickstart (synthetic 4-device CPU mesh)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python ...
+
+    from repro.shard import ShardedEngine, user_mesh
+
+    eng = ShardedEngine(facilities, users, mesh=user_mesh(4))
+    masks = eng.query_batch(queries, k=10)   # bit-identical to RkNNEngine
+
+See ``docs/API.md`` ("Sharded serving") for the replication-vs-sharding
+contract and the version-lockstep rule.
+"""
+
+from repro.shard.engine import ShardDispatch, ShardedEngine, ShardState, ShardView
+from repro.shard.mesh import mesh_shards, shard_devices, user_mesh
+from repro.shard.reduce import assemble_counts, result_sizes, tree_psum
+
+__all__ = [
+    "ShardedEngine",
+    "ShardDispatch",
+    "ShardState",
+    "ShardView",
+    "user_mesh",
+    "mesh_shards",
+    "shard_devices",
+    "tree_psum",
+    "assemble_counts",
+    "result_sizes",
+]

@@ -2,11 +2,13 @@
 
 from repro.workloads.scenarios import (
     SCENARIOS,
+    SHARDING_REGIMES,
     Scenario,
     Workload,
     calibration_grid,
     get_scenario,
     scenario_names,
+    sharding_scenarios,
 )
 from repro.workloads.updates import (
     drifting_users,
@@ -21,6 +23,8 @@ __all__ = [
     "get_scenario",
     "scenario_names",
     "calibration_grid",
+    "sharding_scenarios",
+    "SHARDING_REGIMES",
     "drifting_users",
     "facility_churn",
     "facility_jitter",

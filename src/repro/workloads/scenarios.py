@@ -37,6 +37,7 @@ __all__ = [
     "get_scenario",
     "scenario_names",
     "calibration_grid",
+    "sharding_scenarios",
 ]
 
 
@@ -100,6 +101,12 @@ class Scenario:
         qs = [int(i) for i in rng.integers(0, len(f), self.q)]
         return Workload(self.name, f, u, qs, self.k)
 
+    def generate_users(self, n_users: int) -> Workload:
+        """Materialize at an *absolute* user count (the sharded-serving
+        sweeps are specified as "10^6 users", not as a multiple of the
+        regime's baseline |U|)."""
+        return self.generate(scale=n_users / max(self.n_users, 1))
+
 
 #: The paper's hard regimes (Figs 7–14) plus distribution ablations.
 #: Cardinalities are sized so the full sweep stays tractable on CPU at
@@ -137,6 +144,18 @@ def get_scenario(name: str) -> Scenario:
         raise ValueError(
             f"scenario must be one of {scenario_names()}, got {name!r}"
         ) from None
+
+
+#: The two regimes the million-user sharded sweep runs (ISSUE 7): the
+#: paper's headline RT regime (few facilities, a flood of users) and the
+#: dense-user regime — the ones whose cost is verify-dominated, i.e.
+#: where the user axis is the thing worth partitioning.
+SHARDING_REGIMES: tuple[str, ...] = ("dense_user", "sparse_facility")
+
+
+def sharding_scenarios(n_users: int) -> list[Workload]:
+    """The sharded-serving sweep workloads at an absolute user count."""
+    return [SCENARIOS[name].generate_users(n_users) for name in SHARDING_REGIMES]
 
 
 def calibration_grid(fast: bool = True, seed: int = 0) -> list[Scenario]:
