@@ -24,6 +24,13 @@ from repro.core.scene import build_scene
 from repro.data.spatial import facility_user_split
 from repro.kernels import ops as kops
 
+#: Planner drift gate (scenario_sweep): the warm-sweep median
+#: |ln(observed/predicted)| per assigned backend must stay under this.
+#: ln 4.5 ≈ 1.5 — a cost model off by a consistent 4.5x multiple is
+#: broken (stale profile, dead feature), while honest serving noise at
+#: CI scale stays well inside it.
+DRIFT_MEDIAN_MAX = 1.5
+
 
 def _fu(name: str, n_fac: int, scale: float, seed: int = 0):
     pts = dataset(name, scale)
@@ -406,6 +413,7 @@ def scenario_sweep(
     import os
 
     from repro.core.backends import get_backend, timeable_backends
+    from repro.obs import Histogram
     from repro.planner.calibrate import calibrate
     from repro.planner.profiles import (
         get_active_profile,
@@ -434,6 +442,9 @@ def scenario_sweep(
         totals = {b: 0.0 for b in contenders}
         total_q = 0
         chosen_all: collections.Counter = collections.Counter()
+        # per-assigned-backend pred-vs-obs log residuals, pooled across
+        # every scenario's planner engine (the drift gate's evidence)
+        drift: dict[str, Histogram] = {}
         for name, sc in SCENARIOS.items():
             w = sc.generate(scale)
             qs, k = w.qs, w.k
@@ -442,6 +453,8 @@ def scenario_sweep(
             for b in contenders:
                 eng = RkNNEngine(w.facilities, w.users, RkNNConfig(backend=b))
                 eng.query_batch(qs, k)  # cold: jit warmup + cache fill
+                for _labels, h in eng.metrics.find("planner.residual"):
+                    h.reset()  # the cold call's jit-compile outlier
                 best_t = np.inf
                 for _ in range(3):  # best-of-3 warm calls (noise floor)
                     t0 = time.perf_counter()
@@ -450,6 +463,10 @@ def scenario_sweep(
                 times[b] = best_t
                 masks[b] = r.masks
                 totals[b] += times[b]
+                for labels, h in eng.metrics.find("planner.residual"):
+                    drift.setdefault(
+                        labels["backend"], Histogram(signed=True)
+                    ).merge(h)
             for b in fixed:
                 assert np.array_equal(masks[backend], masks[b]), (name, b)
             plan = get_backend("auto").explain() if backend == "auto" else None
@@ -489,6 +506,32 @@ def scenario_sweep(
                 ),
             )
         )
+        if drift:
+            # planner drift gate: median |ln(obs/pred)| per assigned
+            # backend, pooled over the whole warm sweep.  The threshold is
+            # deliberately loose — it catches a cost model going wrong by
+            # a multiple (stale profile, broken feature), not CI noise.
+            medians = {
+                n: h.abs_percentile(50)
+                for n, h in sorted(drift.items())
+                if h.count >= 2
+            }
+            worst = max(medians.values(), default=0.0)
+            drift_ok = worst <= DRIFT_MEDIAN_MAX
+            rows.append(
+                dict(
+                    name=f"planner_drift_{backend}",
+                    us_per_call=0.0,
+                    derived=(
+                        f"drift_ok={drift_ok} worst_abs_median={worst:.2f} "
+                        f"threshold={DRIFT_MEDIAN_MAX} "
+                        + " ".join(
+                            f"{n}={m:.2f}/n{drift[n].count}"
+                            for n, m in medians.items()
+                        )
+                    ),
+                )
+            )
     finally:
         set_active_profile(prev)
     return rows
@@ -843,3 +886,52 @@ def sharded_scaling(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[di
             )
         )
     return rows
+
+
+# --------------------------------------------- observability overhead (ours)
+def obs_overhead(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+    """The tracing-enabled serving tax, measured interleaved.
+
+    One warm engine serves the same batch with span recording off and on,
+    alternating (so drift in machine load hits both arms equally), best-of
+    per arm.  A span always takes its two ``perf_counter`` readings — the
+    engine needs the elapsed time regardless — so the *enabled* delta is
+    purely the ring write + interning at span exit.  Gate:
+    ``ratio <= 1.03`` (tracing costs at most 3% of the disabled path).
+    """
+    from repro.obs import Tracer, set_tracer
+
+    rng = np.random.default_rng(0)
+    F, U = _fu("CAL", 400, scale)
+    q_n = n_queries or 16
+    qs = [int(q) for q in rng.integers(0, len(F), q_n)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="grid"))
+    eng.query_batch(qs, 10)  # jit + scene/prepared caches warm
+    eng.query_batch(qs, 10)
+    prev = set_tracer(Tracer())  # fresh rings; global state restored below
+    best = {"off": np.inf, "on": np.inf}
+    try:
+        from repro.obs import get_tracer
+
+        tracer = get_tracer()
+        for _ in range(9):
+            for mode in ("off", "on"):
+                tracer.enabled = mode == "on"
+                t0 = time.perf_counter()
+                eng.query_batch(qs, 10)
+                best[mode] = min(best[mode], time.perf_counter() - t0)
+        n_spans = sum(1 for _ in tracer.records())
+    finally:
+        set_tracer(prev)
+    ratio = best["on"] / max(best["off"], 1e-12)
+    return [
+        dict(
+            name="obs_overhead",
+            us_per_call=best["on"] / q_n * 1e6,
+            derived=(
+                f"ratio={ratio:.3f} ok={ratio <= 1.03} "
+                f"off={best['off']*1e3:.2f}ms on={best['on']*1e3:.2f}ms "
+                f"spans={n_spans} Q={q_n}"
+            ),
+        )
+    ]

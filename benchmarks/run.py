@@ -50,6 +50,7 @@ BENCHES = [
     ("update_throughput", bench_rknn.update_throughput),
     ("mono", bench_rknn.mono_queries),
     ("sharded_scaling", bench_rknn.sharded_scaling),
+    ("obs_overhead", bench_rknn.obs_overhead),
 ]
 
 
@@ -91,7 +92,18 @@ def print_trend() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=float, default=DEFAULT_SCALE)
-    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated substring filters on bench name (any match runs)",
+    )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT",
+        help="record engine spans for the whole run and write a Chrome "
+        "trace_event JSON (open in chrome://tracing or Perfetto)",
+    )
     ap.add_argument(
         "--json",
         default=None,
@@ -120,12 +132,18 @@ def main() -> None:
         print_trend()
         return
 
+    if args.trace:
+        from repro.obs import enable_tracing
+
+        enable_tracing()
+
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
     all_rows: list[dict] = []
     errors: list[dict] = []
+    only = [s for s in (args.only or "").split(",") if s]
     for name, fn in BENCHES:
-        if args.only and args.only not in name:
+        if only and not any(s in name for s in only):
             continue
         kw = {"scale": args.scale}
         if args.backend and "backend" in inspect.signature(fn).parameters:
@@ -150,6 +168,13 @@ def main() -> None:
                 )
             )
     wall = time.perf_counter() - t0
+    if args.trace:
+        from repro.obs import disable_tracing, write_chrome_trace
+
+        disable_tracing()
+        obj = write_chrome_trace(args.trace)
+        n = sum(1 for e in obj["traceEvents"] if e.get("ph") == "X")
+        print(f"# wrote {n} spans to {args.trace}", file=sys.stderr)
     if args.json:
         payload = dict(
             meta=dict(

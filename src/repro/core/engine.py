@@ -33,9 +33,9 @@ from __future__ import annotations
 import collections
 import concurrent.futures
 import dataclasses
+import math
 import queue
 import threading
-import time
 from typing import Any
 
 import numpy as np
@@ -54,6 +54,7 @@ from repro.core.hybrid import SceneCache, _q_key
 from repro.core.results import RkNNBatchResult, RkNNResult
 from repro.core.scene import Scene, build_scene
 from repro.core.snapshot import EngineSnapshot
+from repro.obs import Histogram, MetricsRegistry, span
 from repro.planner.models import WorkloadShape
 
 __all__ = ["RkNNConfig", "EngineStats", "RkNNEngine", "serve_shardings"]
@@ -102,9 +103,15 @@ class RkNNConfig:
     online_recalibration: bool = False
 
 
-@dataclasses.dataclass
 class EngineStats:
-    """Cumulative counters over the engine's lifetime.
+    """The legacy cumulative-stats surface, as live **views** over the
+    engine's :class:`~repro.obs.MetricsRegistry`.
+
+    Every field that used to be a mutated dataclass attribute is now a
+    property reading the underlying counters/gauges/histograms, so the
+    public shape is unchanged while the same telemetry also carries full
+    per-``(phase, backend, shard)`` distributions (``engine.metrics
+    .snapshot()`` exposes those, including p50/p90/p99).
 
     The ``planner_*`` fields only move when queries route through the
     ``auto`` backend: per-backend dispatch counts and the running
@@ -117,21 +124,115 @@ class EngineStats:
     indexed by shard, and the lifetime imbalance ratio
     ``max(shard_verify) / mean(shard_verify)`` — 1.0 is perfectly
     balanced; clustered user distributions drift above it.
+
+    ``events_dropped`` / ``continuous_pruned`` surface the dynamic
+    engine's standing-query bookkeeping: events lost to saturated
+    :class:`~repro.dynamic.continuous.ContinuousQuery` buffers and dead
+    handles pruned on the update path.
     """
 
-    n_queries: int = 0
-    n_batches: int = 0
-    t_filter_s: float = 0.0
-    t_verify_s: float = 0.0
-    m_max: int = 0
-    batch_cache_hits: int = 0
-    planner_decisions: dict = dataclasses.field(default_factory=dict)
-    planner_pred_s: float = 0.0
-    planner_obs_s: float = 0.0
-    planner_recal_nudges: int = 0
-    shard_filter_s: list = dataclasses.field(default_factory=list)
-    shard_verify_s: list = dataclasses.field(default_factory=list)
-    shard_imbalance: float = 1.0
+    def __init__(self, metrics: MetricsRegistry):
+        self.metrics = metrics
+
+    def _phase_sum(self, name: str, phase: str) -> float:
+        return sum(
+            h.sum
+            for labels, h in self.metrics.find(name)
+            if labels.get("phase") == phase
+        )
+
+    def _shard_list(self, phase: str) -> list[float]:
+        per = {
+            int(labels["shard"]): h.sum
+            for labels, h in self.metrics.find("shard.phase_s")
+            if labels.get("phase") == phase
+        }
+        if not per:
+            return []
+        return [per.get(i, 0.0) for i in range(max(per) + 1)]
+
+    @property
+    def n_queries(self) -> int:
+        return self.metrics.counter("queries").value
+
+    @property
+    def n_batches(self) -> int:
+        return self.metrics.counter("batches").value
+
+    @property
+    def t_filter_s(self) -> float:
+        return self._phase_sum("phase_s", "filter")
+
+    @property
+    def t_verify_s(self) -> float:
+        return self._phase_sum("phase_s", "verify")
+
+    @property
+    def m_max(self) -> int:
+        return int(self.metrics.gauge("m_max").value)
+
+    @property
+    def batch_cache_hits(self) -> int:
+        return self.metrics.counter("batch_cache.hits").value
+
+    @property
+    def planner_decisions(self) -> dict:
+        return {
+            labels["backend"]: c.value
+            for labels, c in self.metrics.find("planner.decisions")
+        }
+
+    @property
+    def planner_pred_s(self) -> float:
+        return sum(
+            h.sum
+            for labels, h in self.metrics.find("planner.plan_s")
+            if labels.get("kind") == "pred"
+        )
+
+    @property
+    def planner_obs_s(self) -> float:
+        return sum(
+            h.sum
+            for labels, h in self.metrics.find("planner.plan_s")
+            if labels.get("kind") == "obs"
+        )
+
+    @property
+    def planner_recal_nudges(self) -> int:
+        return self.metrics.counter("planner.recal_nudges").value
+
+    @property
+    def shard_filter_s(self) -> list[float]:
+        return self._shard_list("filter")
+
+    @property
+    def shard_verify_s(self) -> list[float]:
+        return self._shard_list("verify")
+
+    @property
+    def shard_imbalance(self) -> float:
+        found = self.metrics.find("shard.imbalance")
+        return found[0][1].value if found else 1.0
+
+    @property
+    def events_dropped(self) -> int:
+        return self.metrics.counter("continuous.events_dropped").value
+
+    @property
+    def continuous_pruned(self) -> int:
+        return self.metrics.counter("continuous.pruned").value
+
+    def __repr__(self) -> str:  # debugging parity with the old dataclass
+        fields = (
+            "n_queries", "n_batches", "t_filter_s", "t_verify_s", "m_max",
+            "batch_cache_hits", "planner_decisions", "planner_pred_s",
+            "planner_obs_s", "planner_recal_nudges", "shard_filter_s",
+            "shard_verify_s", "shard_imbalance", "events_dropped",
+            "continuous_pruned",
+        )
+        inner = ", ".join(f"{f}={getattr(self, f)!r}" for f in fields)
+        return f"EngineStats({inner})"
 
 
 def _next_pow2(n: int) -> int:
@@ -185,7 +286,9 @@ class RkNNEngine:
         get_backend(config.backend)  # validate eagerly
         self.config = config
         self.mesh = mesh
-        self.stats = EngineStats()
+        self.metrics = MetricsRegistry()
+        self.stats = EngineStats(self.metrics)
+        self._init_metrics()
         self._snap = self._make_snapshot(
             0,
             np.asarray(facilities, dtype=np.float64),
@@ -232,6 +335,72 @@ class RkNNEngine:
             scene_cache=scene_cache,
             batch_capacity=self.config.batch_cache,
         )
+
+    # ------------------------------------------------------------------
+    # observability (the engine's metrics registry; EngineStats is a view)
+    # ------------------------------------------------------------------
+    def _init_metrics(self) -> None:
+        """Eager scalar metrics + derived gauges.  Per-(phase, backend)
+        histograms are created lazily through the handle cache so the
+        steady-state query cost is one dict hit + one observe."""
+        m = self.metrics
+        self._m_queries = m.counter("queries")
+        self._m_batches = m.counter("batches")
+        self._m_cache_hits = m.counter("batch_cache.hits")
+        self._m_mmax = m.gauge("m_max")
+        self._m_lag = m.gauge("mvcc.version_lag")
+        self._m_pred = m.histogram("planner.plan_s", kind="pred")
+        self._m_obs = m.histogram("planner.plan_s", kind="obs")
+        self._m_nudges = m.counter("planner.recal_nudges")
+        self._metric_cache: dict = {}
+        m.derived("scene_cache.hit_ratio", self._scene_cache_hit_ratio)
+        m.derived("batch_cache.hit_ratio", self._batch_cache_hit_ratio)
+        m.derived("mvcc.version", lambda: float(self._snap.version))
+        m.derived("pad_waste", self._pad_waste_ratio)
+
+    def _scene_cache_hit_ratio(self) -> float | None:
+        sc = self._snap.scene_cache
+        if sc is None:
+            return None
+        total = sc.hits + sc.misses
+        return sc.hits / total if total else None
+
+    def _batch_cache_hit_ratio(self) -> float | None:
+        n = self._m_batches.value
+        return self._m_cache_hits.value / n if n else None
+
+    def _pad_waste_ratio(self) -> float | None:
+        try:
+            return float(self._snap.pad_waste(self._snap.rect, self.config.grid_g))
+        except Exception:
+            return None
+
+    def _phase_hist(self, phase: str, backend: str) -> Histogram:
+        key = (phase, backend)
+        h = self._metric_cache.get(key)
+        if h is None:
+            h = self._metric_cache[key] = self.metrics.histogram(
+                "phase_s", phase=phase, backend=backend
+            )
+        return h
+
+    def _decision_counter(self, backend: str):
+        key = ("dec", backend)
+        c = self._metric_cache.get(key)
+        if c is None:
+            c = self._metric_cache[key] = self.metrics.counter(
+                "planner.decisions", backend=backend
+            )
+        return c
+
+    def _residual_hist(self, backend: str) -> Histogram:
+        key = ("res", backend)
+        h = self._metric_cache.get(key)
+        if h is None:
+            h = self._metric_cache[key] = self.metrics.histogram(
+                "planner.residual", signed=True, backend=backend
+            )
+        return h
 
     # ------------------------------------------------------------------
     # snapshot delegation (compat surface; query paths resolve _snap once)
@@ -485,7 +654,7 @@ class RkNNEngine:
             return None
         hit = snap.batch_cache.get(key)
         if hit is not None:
-            self.stats.batch_cache_hits += 1
+            self._m_cache_hits.inc()
         return hit
 
     def _batch_cache_put(self, snap: EngineSnapshot, key, value) -> None:
@@ -580,18 +749,25 @@ class RkNNEngine:
         )
 
     def _record_plan(self, planner, plan: dict, observed_s: float) -> None:
-        """Close out one plan: observed cost, engine log, stats, planner."""
+        """Close out one plan: observed cost, engine log, metrics, planner.
+
+        ``observed_s`` comes from the query path's spans (filter + verify
+        elapsed), so the planner's recalibration signal and the exported
+        trace are the same measurement.  Per-dispatched-backend log-
+        residuals ``log(obs/pred)`` land in signed histograms — the drift
+        gate's raw material."""
         plan["observed_s"] = observed_s
         self._plan_log.append(plan)
         for name, n in plan.get("decisions", {}).items():
-            self.stats.planner_decisions[name] = (
-                self.stats.planner_decisions.get(name, 0) + n
-            )
-        self.stats.planner_pred_s += plan.get("predicted_s", 0.0)
-        self.stats.planner_obs_s += observed_s
+            self._decision_counter(name).inc(n)
+        self._m_pred.observe(plan.get("predicted_s", 0.0))
+        self._m_obs.observe(observed_s)
         planner.record(plan)
+        for name, pred, obs, _verify_only in planner._pred_obs_pairs(plan):
+            if pred > 0.0 and obs > 0.0:
+                self._residual_hist(name).observe(math.log(obs / pred))
         if self.config.online_recalibration:
-            self.stats.planner_recal_nudges += planner.observe(plan)
+            self._m_nudges.inc(planner.observe(plan))
 
     def explain(self) -> list[dict]:
         """Recent ``auto`` plans, oldest first: each entry carries the
@@ -670,52 +846,58 @@ class RkNNEngine:
 
         if not b.uses_scene:
             # geometry-free: never materialize the device user arrays
-            t0 = time.perf_counter()
-            counts = b.count(
-                QueryRequest(
-                    xs=None,
-                    ys=None,
-                    k=k,
-                    users=snap.users,
-                    facilities=snap.facilities,
-                    q_pt=q_pt,
-                    exclude=exclude,
-                )
-            )
-            t1 = time.perf_counter()
-            self.stats.n_queries += 1
-            self.stats.t_verify_s += t1 - t0
+            with span("query", backend=b.name, version=snap.version):
+                with span("verify", backend=b.name) as sv:
+                    counts = b.count(
+                        QueryRequest(
+                            xs=None,
+                            ys=None,
+                            k=k,
+                            users=snap.users,
+                            facilities=snap.facilities,
+                            q_pt=q_pt,
+                            exclude=exclude,
+                        )
+                    )
+            t_verify = sv.elapsed_s
+            self._m_queries.inc()
+            self._phase_hist("verify", b.name).observe(t_verify)
+            self._m_lag.set(float(self._snap.version - snap.version))
             if plan is not None:
-                self._record_plan(planner, plan, t1 - t0)
+                self._record_plan(planner, plan, t_verify)
             return RkNNResult(
-                counts < k, counts, None, 0.0, t1 - t0, b.name, snap.version
+                counts < k, counts, None, 0.0, t_verify, b.name, snap.version
             )
 
-        t0 = time.perf_counter()
-        rect = self._rect_for(snap, q_pt[None])
-        scene = self._build_scene(snap, q_build, k, rect, pad_to=self.config.pad_to)
-        index = self._index_for(snap, b, scene)
-        t1 = time.perf_counter()
-        counts = b.count(
-            QueryRequest(
-                xs=snap.xs,
-                ys=snap.ys,
-                k=k,
-                grid_g=self.config.grid_g,
-                scene=scene,
-                index=index,
-                memo=snap.kernel_memo,
-            )
-        )
-        t2 = time.perf_counter()
-        self.stats.n_queries += 1
-        self.stats.t_filter_s += t1 - t0
-        self.stats.t_verify_s += t2 - t1
-        self.stats.m_max = max(self.stats.m_max, scene.n_tris)
+        with span("query", backend=b.name, version=snap.version):
+            with span("filter", backend=b.name) as sf:
+                rect = self._rect_for(snap, q_pt[None])
+                scene = self._build_scene(
+                    snap, q_build, k, rect, pad_to=self.config.pad_to
+                )
+                index = self._index_for(snap, b, scene)
+            with span("verify", backend=b.name) as sv:
+                counts = b.count(
+                    QueryRequest(
+                        xs=snap.xs,
+                        ys=snap.ys,
+                        k=k,
+                        grid_g=self.config.grid_g,
+                        scene=scene,
+                        index=index,
+                        memo=snap.kernel_memo,
+                    )
+                )
+        t_filter, t_verify = sf.elapsed_s, sv.elapsed_s
+        self._m_queries.inc()
+        self._phase_hist("filter", b.name).observe(t_filter)
+        self._phase_hist("verify", b.name).observe(t_verify)
+        self._m_mmax.set_max(scene.n_tris)
+        self._m_lag.set(float(self._snap.version - snap.version))
         if plan is not None:
-            self._record_plan(planner, plan, t2 - t0)
+            self._record_plan(planner, plan, t_filter + t_verify)
         return RkNNResult(
-            counts < k, counts, scene, t1 - t0, t2 - t1, b.name, snap.version
+            counts < k, counts, scene, t_filter, t_verify, b.name, snap.version
         )
 
     def query_batch(
@@ -769,42 +951,46 @@ class RkNNEngine:
         queries, q_pts, excludes = _normalize_queries(snap.facilities, qs)
 
         if not b.uses_scene:
-            t0 = time.perf_counter()
-            counts = b.count_batch(
-                BatchRequest(
-                    xs=None,
-                    ys=None,
-                    k=k,
-                    users=snap.users,
-                    facilities=snap.facilities,
-                    q_pts=q_pts,
-                    excludes=excludes,
-                ),
-                None,
-            )
-            t1 = time.perf_counter()
-            self.stats.n_queries += len(qs)
-            self.stats.n_batches += 1
-            self.stats.t_verify_s += t1 - t0
+            with span("batch", backend=b.name, q=len(qs), version=snap.version):
+                with span("verify", backend=b.name) as sv:
+                    counts = b.count_batch(
+                        BatchRequest(
+                            xs=None,
+                            ys=None,
+                            k=k,
+                            users=snap.users,
+                            facilities=snap.facilities,
+                            q_pts=q_pts,
+                            excludes=excludes,
+                        ),
+                        None,
+                    )
+            t_verify = sv.elapsed_s
+            self._m_queries.inc(len(qs))
+            self._m_batches.inc()
+            self._phase_hist("verify", b.name).observe(t_verify)
+            self._m_lag.set(float(self._snap.version - snap.version))
             return RkNNBatchResult(
-                counts < k, counts, None, 0.0, t1 - t0, b.name, k, snap.version
+                counts < k, counts, None, 0.0, t_verify, b.name, k, snap.version
             )
 
-        t0 = time.perf_counter()
-        rect = self._rect_for(snap, q_pts)
-        req, prepared, scenes = self._filter_batch(
-            snap, b, queries, q_pts, excludes, k, rect, workers
-        )
-        t1 = time.perf_counter()
-        counts = b.count_batch(req, prepared)
-        t2 = time.perf_counter()
-        self.stats.n_queries += len(qs)
-        self.stats.n_batches += 1
-        self.stats.t_filter_s += t1 - t0
-        self.stats.t_verify_s += t2 - t1
-        self.stats.m_max = max(self.stats.m_max, max(s.n_tris for s in scenes))
+        with span("batch", backend=b.name, q=len(qs), version=snap.version):
+            with span("filter", backend=b.name) as sf:
+                rect = self._rect_for(snap, q_pts)
+                req, prepared, scenes = self._filter_batch(
+                    snap, b, queries, q_pts, excludes, k, rect, workers
+                )
+            with span("verify", backend=b.name) as sv:
+                counts = b.count_batch(req, prepared)
+        t_filter, t_verify = sf.elapsed_s, sv.elapsed_s
+        self._m_queries.inc(len(qs))
+        self._m_batches.inc()
+        self._phase_hist("filter", b.name).observe(t_filter)
+        self._phase_hist("verify", b.name).observe(t_verify)
+        self._m_mmax.set_max(max(s.n_tris for s in scenes))
+        self._m_lag.set(float(self._snap.version - snap.version))
         return RkNNBatchResult(
-            counts < k, counts, scenes, t1 - t0, t2 - t1, b.name, k, snap.version
+            counts < k, counts, scenes, t_filter, t_verify, b.name, k, snap.version
         )
 
     def _dispatch_group(
@@ -824,62 +1010,62 @@ class RkNNEngine:
         fixed-backend batches, so a repeated ``auto`` workload skips the
         re-stacking just like a repeated fixed-backend one.
         """
-        t0 = time.perf_counter()
-        if not b.uses_scene:
-            req = BatchRequest(
-                xs=None,
-                ys=None,
-                k=k,
-                users=snap.users,
-                facilities=snap.facilities,
-                q_pts=q_pts[idxs],
-                excludes=[excludes[i] for i in idxs],
-            )
-            prepared = None
-        else:
-            cache_key = None
-            if self.config.batch_cache > 0:
-                # excludes participate in the key: a facility-index query
-                # (exclude=i) and a point query at that facility's exact
-                # coordinates (exclude=None) build different scenes
-                cache_key = (
-                    "auto",
-                    b.name,
-                    k,
-                    tuple((_q_key(q_pts[i]), excludes[i]) for i in idxs),
-                    rect,
+        sf = span("filter", backend=b.name, group=1)
+        with sf:
+            if not b.uses_scene:
+                req = BatchRequest(
+                    xs=None,
+                    ys=None,
+                    k=k,
+                    users=snap.users,
+                    facilities=snap.facilities,
+                    q_pts=q_pts[idxs],
+                    excludes=[excludes[i] for i in idxs],
                 )
-                hit = self._batch_cache_get(snap, cache_key)
-                if hit is not None:
-                    req, prepared, _sub = hit
-                    t1 = time.perf_counter()
-                    counts = b.count_batch(req, prepared)
-                    t2 = time.perf_counter()
-                    return np.asarray(counts), t1 - t0, t2 - t1
-            sub = [scenes[i] for i in idxs]
-            dispatch = self._mesh_dispatch_for(snap, b, rect=rect, k=k)
-            req = BatchRequest(
-                xs=None if dispatch is not None else snap.xs,
-                ys=None if dispatch is not None else snap.ys,
-                k=k,
-                rect=rect,
-                grid_g=self.config.grid_g,
-                scenes=sub,
-                indexes=[self._index_for(snap, b, s) for s in sub],
-                users=snap.users,
-                facilities=snap.facilities,
-                q_pts=q_pts[idxs],
-                excludes=[excludes[i] for i in idxs],
-                mp=self._mp_bucket(sub),
-                dispatch=dispatch,
-                memo=snap.kernel_memo,
-            )
-            prepared = self._prepare_batch(b, req)
-            self._batch_cache_put(snap, cache_key, (req, prepared, sub))
-        t1 = time.perf_counter()
-        counts = b.count_batch(req, prepared)
-        t2 = time.perf_counter()
-        return np.asarray(counts), t1 - t0, t2 - t1
+                prepared = None
+            else:
+                cache_key = None
+                if self.config.batch_cache > 0:
+                    # excludes participate in the key: a facility-index query
+                    # (exclude=i) and a point query at that facility's exact
+                    # coordinates (exclude=None) build different scenes
+                    cache_key = (
+                        "auto",
+                        b.name,
+                        k,
+                        tuple((_q_key(q_pts[i]), excludes[i]) for i in idxs),
+                        rect,
+                    )
+                    hit = self._batch_cache_get(snap, cache_key)
+                    if hit is not None:
+                        req, prepared, _sub = hit
+                        sf.__exit__(None, None, None)
+                        with span("verify", backend=b.name, group=1) as sv:
+                            counts = b.count_batch(req, prepared)
+                        return np.asarray(counts), sf.elapsed_s, sv.elapsed_s
+                sub = [scenes[i] for i in idxs]
+                dispatch = self._mesh_dispatch_for(snap, b, rect=rect, k=k)
+                req = BatchRequest(
+                    xs=None if dispatch is not None else snap.xs,
+                    ys=None if dispatch is not None else snap.ys,
+                    k=k,
+                    rect=rect,
+                    grid_g=self.config.grid_g,
+                    scenes=sub,
+                    indexes=[self._index_for(snap, b, s) for s in sub],
+                    users=snap.users,
+                    facilities=snap.facilities,
+                    q_pts=q_pts[idxs],
+                    excludes=[excludes[i] for i in idxs],
+                    mp=self._mp_bucket(sub),
+                    dispatch=dispatch,
+                    memo=snap.kernel_memo,
+                )
+                prepared = self._prepare_batch(b, req)
+                self._batch_cache_put(snap, cache_key, (req, prepared, sub))
+        with span("verify", backend=b.name, group=1) as sv:
+            counts = b.count_batch(req, prepared)
+        return np.asarray(counts), sf.elapsed_s, sv.elapsed_s
 
     def _query_batch_planner(
         self, snap: EngineSnapshot, planner, qs: list, k: int, workers: int
@@ -904,7 +1090,44 @@ class RkNNEngine:
         """
         queries, q_pts, excludes = _normalize_queries(snap.facilities, qs)
         n_f, n_u, q_n = len(snap.facilities), len(snap.users), len(qs)
-        t0 = time.perf_counter()
+        sb = span("batch", backend="auto", q=q_n, version=snap.version)
+        with sb:
+            counts, plan, per_q, groups, scenes, t_count_total = (
+                self._plan_and_dispatch(
+                    snap, planner, queries, q_pts, excludes, k, rect_workers=workers,
+                    n_f=n_f, n_u=n_u, q_n=q_n,
+                )
+            )
+        # filter = everything in the batch wall that was not a group's
+        # device count dispatch (planning, scene builds, group stacking) —
+        # same accounting as the old inline perf_counter arithmetic
+        t_filter = sb.elapsed_s - t_count_total
+
+        self._m_queries.inc(q_n)
+        self._m_batches.inc()
+        self._phase_hist("filter", "auto").observe(t_filter)
+        self._m_lag.set(float(self._snap.version - snap.version))
+        if scenes:
+            self._m_mmax.set_max(max(s.n_tris for s in scenes))
+        self._record_plan(planner, plan, sb.elapsed_s)
+        return RkNNBatchResult(
+            counts < k,
+            counts,
+            scenes,
+            t_filter,
+            t_count_total,
+            "auto",
+            k,
+            snap.version,
+        )
+
+    def _plan_and_dispatch(
+        self, snap, planner, queries, q_pts, excludes, k,
+        *, rect_workers, n_f, n_u, q_n,
+    ):
+        """Body of the ``auto`` batch (inside its ``batch`` span): plan
+        (or reuse a memoized decision), build scenes, dispatch groups."""
+        workers = rect_workers
         rect = self._rect_for(snap, q_pts)
         pad_w = snap.pad_waste(rect, self.config.grid_g)
 
@@ -992,9 +1215,10 @@ class RkNNEngine:
             )
             counts[idxs] = gcounts
             t_count_total += t_count
+            # the group's device count time lands under ITS backend; the
+            # host-side remainder lands under "auto" in the caller
+            self._phase_hist("verify", name).observe(t_count)
             observed_group[name] = t_prep + t_count
-        t_end = time.perf_counter()
-        t_filter = (t_end - t0) - t_count_total
 
         plan.update(
             assignments=[name for name, _ in per_q],
@@ -1004,25 +1228,7 @@ class RkNNEngine:
             observed_group_s=observed_group,
             decisions={name: len(idxs) for name, idxs in groups.items()},
         )
-        self.stats.n_queries += q_n
-        self.stats.n_batches += 1
-        self.stats.t_filter_s += t_filter
-        self.stats.t_verify_s += t_count_total
-        if scenes:
-            self.stats.m_max = max(
-                self.stats.m_max, max(s.n_tris for s in scenes)
-            )
-        self._record_plan(planner, plan, t_end - t0)
-        return RkNNBatchResult(
-            counts < k,
-            counts,
-            scenes,
-            t_filter,
-            t_count_total,
-            "auto",
-            k,
-            snap.version,
-        )
+        return counts, plan, per_q, groups, scenes, t_count_total
 
     def query_mono(self, q_idx: int, k: int, *, backend: str | None = None) -> RkNNResult:
         """Monochromatic RkNN over the facility set (paper §2.1 / §4.5).
@@ -1054,10 +1260,10 @@ class RkNNEngine:
                     rect=snap._rect if snap.explicit_rect else None,
                 )
             res = snap._mono.query(int(q_idx), k + 1, backend=backend)
-            # mirror the sub-engine's work into our stats
-            self.stats.n_queries += 1
-            self.stats.t_filter_s += res.t_filter_s
-            self.stats.t_verify_s += res.t_verify_s
+            # mirror the sub-engine's work into our metrics
+            self._m_queries.inc()
+            self._phase_hist("filter", res.backend).observe(res.t_filter_s)
+            self._phase_hist("verify", res.backend).observe(res.t_verify_s)
         counts = np.asarray(res.counts, np.int32).copy()
         # self-hit correction: every point except q hits its own occluder
         # (q's occluder is excluded from the scene, so its count is already
@@ -1099,7 +1305,9 @@ class RkNNEngine:
                     # naturally picks up concurrent updates batch to batch
                     snap = self._snap
                     qs = list(batch)
-                    t0 = time.perf_counter()
+                    sf = span("filter", backend=b.name, stream=1,
+                              version=snap.version)
+                    sf.__enter__()
                     queries, q_pts, excludes = _normalize_queries(
                         snap.facilities, qs
                     )
@@ -1143,8 +1351,9 @@ class RkNNEngine:
                             excludes=excludes,
                         )
                         built = (req, None, None)
-                    t_filter = time.perf_counter() - t0
-                    self.stats.t_filter_s += t_filter
+                    sf.__exit__(None, None, None)
+                    t_filter = sf.elapsed_s
+                    self._phase_hist("filter", b.name).observe(t_filter)
                     buf.put((batch, len(qs), b_eff, plan, t_filter, built))
                 buf.put(None)
             except BaseException as e:  # surface in the consumer, no deadlock
@@ -1159,20 +1368,18 @@ class RkNNEngine:
             if isinstance(item, BaseException):
                 raise item
             batch, q_n, b_eff, plan, t_filter, (req, prepared, scenes) = item
-            t0 = time.perf_counter()
-            counts = b_eff.count_batch(req, prepared)
-            t1 = time.perf_counter()
-            self.stats.t_verify_s += t1 - t0
-            self.stats.n_queries += q_n
-            self.stats.n_batches += 1
+            with span("verify", backend=b_eff.name, stream=1) as sv:
+                counts = b_eff.count_batch(req, prepared)
+            t_verify = sv.elapsed_s
+            self._phase_hist("verify", b_eff.name).observe(t_verify)
+            self._m_queries.inc(q_n)
+            self._m_batches.inc()
             if scenes:
-                self.stats.m_max = max(
-                    self.stats.m_max, max(s.n_tris for s in scenes)
-                )
+                self._m_mmax.set_max(max(s.n_tris for s in scenes))
             if plan is not None:
                 # observed = this batch's own filter + verify work — NOT the
                 # wall-clock since the producer started, which would include
                 # time spent waiting in the double buffer and corrupt the
                 # planner's pred-vs-obs calibration signal
-                self._record_plan(b, plan, t_filter + (t1 - t0))
+                self._record_plan(b, plan, t_filter + t_verify)
             yield batch, counts < k

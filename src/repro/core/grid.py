@@ -46,6 +46,8 @@ __all__ = [
     "stack_grids",
     "grid_hit_counts_batch_jnp",
     "build_throttle",
+    "build_sleep",
+    "build_slept_s",
 ]
 
 #: Per-thread cooperative deprioritization for heavy index builds.  A
@@ -84,6 +86,27 @@ def build_throttle(ratio):
         yield
     finally:
         _build_priority.yield_ratio = prev
+
+
+def build_sleep(seconds: float) -> None:
+    """Cooperative-yield sleep with duty-cycle accounting.
+
+    Every deprioritization sleep (the classify chunk loop here, the
+    pruning iteration loop, the prewarm backstop) routes through this so
+    the MVCC writer can report its throttle duty cycle — slept wall time
+    over total update time — as an obs gauge."""
+    if seconds <= 0.0:
+        return
+    time.sleep(seconds)
+    _build_priority.slept_total = (
+        getattr(_build_priority, "slept_total", 0.0) + seconds
+    )
+
+
+def build_slept_s() -> float:
+    """This thread's cumulative :func:`build_sleep` time (monotone —
+    callers diff two readings around a throttled region)."""
+    return getattr(_build_priority, "slept_total", 0.0)
 
 
 @dataclasses.dataclass
@@ -196,7 +219,7 @@ def _tri_cell_classify_many(
         # a cell whose every corner is inside but SAT failed cannot happen
         partial[sl] = ov & ~f
         if yield_ratio:
-            time.sleep((time.perf_counter() - t_chunk) * yield_ratio)
+            build_sleep((time.perf_counter() - t_chunk) * yield_ratio)
     return tri_idx, gx * G + gy, full, partial
 
 

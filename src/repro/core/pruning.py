@@ -37,7 +37,7 @@ import time
 import numpy as np
 
 from repro.core.geometry import Rect, bisector
-from repro.core.grid import build_yield_ratio
+from repro.core.grid import build_sleep, build_yield_ratio
 
 __all__ = ["PruneStats", "prune_facilities", "STRATEGIES", "adaptive_grid"]
 
@@ -254,7 +254,7 @@ def prune_facilities(
             cov.counts += full_inv.sum(axis=0).astype(np.int32)
             radius = cov.zone_radius(k, q)
         if yield_ratio:
-            time.sleep((time.perf_counter() - t_iter) * yield_ratio)
+            build_sleep((time.perf_counter() - t_iter) * yield_ratio)
 
     safe_radius = (
         max(2.0 * float(radius), max_processed) if np.isfinite(radius) else np.inf

@@ -48,7 +48,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 
 import numpy as np
 
@@ -56,7 +55,13 @@ import jax.numpy as jnp
 
 from repro.core.backends import get_backend
 from repro.core.engine import RkNNConfig, RkNNEngine
-from repro.core.grid import build_throttle, build_yield_ratio
+from repro.core.grid import (
+    build_sleep,
+    build_slept_s,
+    build_throttle,
+    build_yield_ratio,
+)
+from repro.obs import span
 from repro.core.pruning import adaptive_grid
 from repro.core.snapshot import EngineSnapshot
 from repro.dynamic.continuous import ContinuousQuery, influence_dirty_mask
@@ -162,8 +167,8 @@ class DynamicEngine(RkNNEngine):
         self, snap: EngineSnapshot, q, k: int, rect, *, pad_to: int | None = None
     ):
         misses = snap.scene_cache.misses if snap.scene_cache is not None else None
-        t0 = time.perf_counter()
-        scene = super()._build_scene(snap, q, k, rect, pad_to=pad_to)
+        with span("scene-build", version=snap.version) as sb:
+            scene = super()._build_scene(snap, q, k, rect, pad_to=pad_to)
         if (
             misses is not None
             and snap.scene_cache.misses > misses
@@ -172,7 +177,7 @@ class DynamicEngine(RkNNEngine):
             # throttled (deprioritized-prewarm) builds sleep ~2x their CPU
             # time — feeding that wall time into the frontier would teach
             # the policy that rebuilds cost 3x what they do
-            self.refit_policy.observe("rebuild", time.perf_counter() - t0)
+            self.refit_policy.observe("rebuild", sb.elapsed_s)
         return scene
 
     # ------------------------------------------------------------------
@@ -198,15 +203,29 @@ class DynamicEngine(RkNNEngine):
             # an idle engine (batch ingest, the refit-vs-rebuild bench)
             # never sleeps because the clock never moves mid-update.
             read_mark = self._read_clock
+            slept_before = build_slept_s()
             with build_throttle(
                 lambda: 2.0 if self._read_clock != read_mark else 0.0
             ):
-                return self._apply_updates_locked(batch)
+                report = self._apply_updates_locked(batch)
+            # writer-throttle duty cycle: fraction of the update's wall
+            # time spent in deprioritization sleeps (0 on an idle engine)
+            slept = build_slept_s() - slept_before
+            if report.t_update_s > 0.0:
+                self.metrics.gauge("mvcc.writer_throttle_duty").set(
+                    slept / report.t_update_s
+                )
+            return report
 
     def _apply_updates_locked(self, batch: UpdateBatch) -> UpdateReport:
         old = self._snap
         batch.validate(len(old.facilities), len(old.users))
-        t0 = time.perf_counter()
+        with span("update", version=old.version + 1) as su:
+            return self._apply_updates_span(batch, old, su)
+
+    def _apply_updates_span(
+        self, batch: UpdateBatch, old: EngineSnapshot, su
+    ) -> UpdateReport:
         read_mark = self._read_clock  # readers seen since here => contended
 
         old_f, old_u = old.facilities, old.users
@@ -255,10 +274,11 @@ class DynamicEngine(RkNNEngine):
         # ---- scene cache + index memo: survive / refit / rebuild ------
         prewarm: list[tuple] = []
         if old.scene_cache is not None:
-            new.scene_cache, prewarm = self._migrate_scene_cache(
-                old, new, batch, old_fp, rect_changed,
-                old_grid, map_f, changed_pos, report,
-            )
+            with span("migrate", version=new.version):
+                new.scene_cache, prewarm = self._migrate_scene_cache(
+                    old, new, batch, old_fp, rect_changed,
+                    old_grid, map_f, changed_pos, report,
+                )
 
         # ---- prepared-batch LRU + plan memos --------------------------
         self._cow_batch_cache(old, new, batch, rect_changed, report)
@@ -266,7 +286,8 @@ class DynamicEngine(RkNNEngine):
         # ---- writer-side prewarm: rebuild dropped standing scenes into
         # the unpublished snapshot so readers never pay the host rebuild
         if prewarm:
-            self._prewarm_scenes(new, prewarm, report, read_mark)
+            with span("prewarm", version=new.version):
+                self._prewarm_scenes(new, prewarm, report, read_mark)
 
         # ---- publish: one atomic reference swap -----------------------
         self._snap = new
@@ -284,20 +305,32 @@ class DynamicEngine(RkNNEngine):
         )
         # closed/dead handles are dropped here, not at close() time — the
         # handle list is only ever touched on the (serialized) update path
+        n_before = len(self._continuous)
         self._continuous = [cq for cq in self._continuous if cq.alive]
+        if n_before > len(self._continuous):
+            self.metrics.counter("continuous.pruned").inc(
+                n_before - len(self._continuous)
+            )
         if self._continuous:
-            dirty = self._dirty_continuous(batch, changed_pos)
-            for cq, is_dirty in zip(self._continuous, dirty):
-                before = (cq.n_patched, cq.n_skipped, cq.n_events)
-                if is_dirty:
-                    cq._on_update(ctx)
-                else:
-                    cq._on_update_clean(ctx, len(changed_pos) > 0)
-                report.continuous_patched += cq.n_patched - before[0]
-                report.continuous_skipped += cq.n_skipped - before[1]
-                report.continuous_events += cq.n_events - before[2]
+            with span("continuous", version=new.version):
+                dirty = self._dirty_continuous(batch, changed_pos)
+                for cq, is_dirty in zip(self._continuous, dirty):
+                    before = (
+                        cq.n_patched, cq.n_skipped, cq.n_events, cq.events_dropped,
+                    )
+                    if is_dirty:
+                        cq._on_update(ctx)
+                    else:
+                        cq._on_update_clean(ctx, len(changed_pos) > 0)
+                    report.continuous_patched += cq.n_patched - before[0]
+                    report.continuous_skipped += cq.n_skipped - before[1]
+                    report.continuous_events += cq.n_events - before[2]
+                    if cq.events_dropped > before[3]:
+                        self.metrics.counter("continuous.events_dropped").inc(
+                            cq.events_dropped - before[3]
+                        )
 
-        report.t_update_s = time.perf_counter() - t0
+        report.t_update_s = su.elapsed_s
         self.update_stats.n_updates += 1
         self.update_stats.t_update_s += report.t_update_s
         self.update_stats.scenes_survived += report.scenes_survived
@@ -556,46 +589,50 @@ class DynamicEngine(RkNNEngine):
             if decision.action != "refit":
                 note_drop(q_key, k)
                 return None
-            t0 = time.perf_counter()
-            out = refit_scene(
-                scene,
-                map_f,
-                new.facilities,
-                q_build,
-                k,
-                rect,
-                moved_new,
-                strategy=self.config.strategy,
-                grid=grid_param,
-            )
-            if out is None:
-                # a bailed refit attempt is neither a refit nor a rebuild
-                # observation — feeding its (small) cost into either EMA
-                # would skew the frontier
-                note_drop(q_key, k)
-                return None
-            new_scene, changed_tris = out
-            store = old.index_memo.peek(scene)
-            if store:
-                new_store = {}
-                refitted: dict[int, tuple] = {}  # grid/grid-pallas share one build
-                for (bname, g), index in store.items():
-                    if index is None:  # index-less backend (dense paths)
-                        new_store[(bname, g)] = None
-                        continue
-                    hit = refitted.get(id(index))
-                    if hit is None:
-                        hit = get_backend(bname).refit_index(
-                            index, scene, new_scene, changed_tris, grid_g=g
-                        )
-                        refitted[id(index)] = hit
-                        if hit[1]:
-                            report.indexes_refit += 1
-                        else:
-                            report.indexes_rebuilt += 1
-                    new_store[(bname, g)] = hit[0]
-                new.index_memo.adopt(new_scene, new_store)
-            self.refit_policy.observe("refit", time.perf_counter() - t0)
+            sr = span("refit", version=new.version)
+            sr.__enter__()
+            try:
+                out = refit_scene(
+                    scene,
+                    map_f,
+                    new.facilities,
+                    q_build,
+                    k,
+                    rect,
+                    moved_new,
+                    strategy=self.config.strategy,
+                    grid=grid_param,
+                )
+                if out is None:
+                    # a bailed refit attempt is neither a refit nor a rebuild
+                    # observation — feeding its (small) cost into either EMA
+                    # would skew the frontier
+                    note_drop(q_key, k)
+                    return None
+                new_scene, changed_tris = out
+                store = old.index_memo.peek(scene)
+                if store:
+                    new_store = {}
+                    refitted: dict[int, tuple] = {}  # grid/grid-pallas share one build
+                    for (bname, g), index in store.items():
+                        if index is None:  # index-less backend (dense paths)
+                            new_store[(bname, g)] = None
+                            continue
+                        hit = refitted.get(id(index))
+                        if hit is None:
+                            hit = get_backend(bname).refit_index(
+                                index, scene, new_scene, changed_tris, grid_g=g
+                            )
+                            refitted[id(index)] = hit
+                            if hit[1]:
+                                report.indexes_refit += 1
+                            else:
+                                report.indexes_rebuilt += 1
+                        new_store[(bname, g)] = hit[0]
+                    new.index_memo.adopt(new_scene, new_store)
+            finally:
+                sr.__exit__(None, None, None)
+            self.refit_policy.observe("refit", sr.elapsed_s)
             report.scenes_refit += 1
             return (new_fp, new_q_key, k, rect), new_scene
 
@@ -638,15 +675,15 @@ class DynamicEngine(RkNNEngine):
         for q_build, k in pending[:PREWARM_SCENES_CAP]:
             contended = self._read_clock != read_mark
             read_mark = self._read_clock
-            t0 = time.perf_counter()
-            scene = self._build_scene(new, q_build, k, new.rect)
-            if warm_index:
-                self._index_for(new, backend, scene)
+            with span("prewarm-scene", k=k) as sp:
+                scene = self._build_scene(new, q_build, k, new.rect)
+                if warm_index:
+                    self._index_for(new, backend, scene)
             report.scenes_prewarmed += 1
             if contended:
                 # coarse backstop for the build work outside the yielding
                 # hot loops (COW copies, occluder geometry, list packing)
-                time.sleep(0.5 * (time.perf_counter() - t0))
+                build_sleep(0.5 * sp.elapsed_s)
 
 
 @dataclasses.dataclass

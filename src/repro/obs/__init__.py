@@ -1,0 +1,60 @@
+"""Unified observability: spans, metrics, and trace export.
+
+Two layers with different cost contracts:
+
+* **Metrics** (:mod:`repro.obs.metrics`) are always on — every engine
+  owns a :class:`MetricsRegistry` and its legacy ``EngineStats`` fields
+  are views over it.
+* **Span tracing** (:mod:`repro.obs.trace`) is off by default; a
+  :func:`span` still *times* its block (the engine consumes the elapsed
+  time), but recording into the per-thread ring costs one branch until
+  :func:`enable_tracing` flips it on.  Export the recording with
+  :func:`write_chrome_trace` and open it in ``chrome://tracing``.
+
+Quickstart::
+
+    from repro import obs
+    obs.enable_tracing()
+    eng.query_batch(qs, k=8)
+    obs.write_chrome_trace("trace.json")
+    print(obs.metrics_snapshot(eng.metrics))
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import (
+    Span,
+    SpanRing,
+    Tracer,
+    disable_tracing,
+    enable_tracing,
+    get_tracer,
+    set_tracer,
+    span,
+)
+from .export import (
+    chrome_trace,
+    metrics_snapshot,
+    spans,
+    summarize,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "SpanRing",
+    "Tracer",
+    "disable_tracing",
+    "enable_tracing",
+    "get_tracer",
+    "set_tracer",
+    "span",
+    "chrome_trace",
+    "metrics_snapshot",
+    "spans",
+    "summarize",
+    "write_chrome_trace",
+]

@@ -1,0 +1,57 @@
+"""``python -m repro.obs`` — dump/summarize a span recording.
+
+    python -m repro.obs trace.json              # per-span latency digest
+    python -m repro.obs trace.json --slowest 10 # widest spans
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .export import _from_chrome, summarize
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:8.3f}s "
+    if v >= 1e-3:
+        return f"{v * 1e3:8.3f}ms"
+    return f"{v * 1e6:8.1f}µs"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize a Chrome-trace recording exported by repro.obs",
+    )
+    ap.add_argument("trace", help="trace JSON written by write_chrome_trace()")
+    ap.add_argument(
+        "--slowest", type=int, default=0, metavar="N",
+        help="also list the N widest spans",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as fh:
+        obj = json.load(fh)
+    recs = _from_chrome(obj)
+    dropped = obj.get("otherData", {}).get("dropped_spans", 0)
+    print(f"{len(recs)} spans ({dropped} dropped at record time)")
+    print(f"{'span':<28}{'count':>7}{'total':>11}{'p50':>11}{'p99':>11}")
+    for label, s in summarize(recs).items():
+        print(
+            f"{label:<28}{s['count']:>7}"
+            f"{_fmt_s(s['sum']):>11}{_fmt_s(s['p50']):>11}{_fmt_s(s['p99']):>11}"
+        )
+    if args.slowest:
+        recs.sort(key=lambda r: r["t0"] - r["t1"])
+        print(f"\nslowest {args.slowest}:")
+        for r in recs[: args.slowest]:
+            attrs = ",".join(f"{k}={v}" for k, v in sorted(r["attrs"].items()))
+            print(f"  {_fmt_s(r['t1'] - r['t0'])}  {r['name']}  {attrs}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,7 +40,6 @@ shape-changing deltas rebuild the partition lazily.
 from __future__ import annotations
 
 import collections
-import time
 
 import numpy as np
 
@@ -54,6 +53,7 @@ from repro.core.snapshot import EngineSnapshot, LruCache
 from repro.distributed.sharding import user_shard_bounds
 from repro.dynamic.engine import DynamicEngine
 from repro.kernels import ops as _ops
+from repro.obs import span
 from repro.shard.mesh import mesh_shards, shard_devices
 from repro.shard.reduce import tree_psum
 
@@ -174,47 +174,49 @@ class ShardDispatch:
             full_planes = [backend._planes_for(g) for g in indexes]
             per_shard = []
             for view in state.views:
-                t0 = time.perf_counter()
                 if view.n_users == 0:
                     per_shard.append(None)
                     continue
-                xs_s, ys_s, order, ranks, occ, block = backend._buckets_for(
-                    view.xs, view.ys, self.rect, req.grid_g, memo=view.memo
-                )
-                # the shard-local compaction double-whammy: only the cells
-                # THIS shard's users occupy ship, and the plane list axis
-                # pads to the longest live list in THIS region, not the
-                # global max
-                planes_q = stack_cell_planes(
-                    [p[occ] for p in full_planes],
-                    lane_pad=backend.lane_pad,
-                    compact=True,
-                )
-                base_q = np.stack([g.base[occ] for g in indexes]).astype(np.int32)
-                xs_s = jax.device_put(xs_s, view.device)
-                ys_s = jax.device_put(ys_s, view.device)
-                # fuse the shard-local unsort with the global reassembly:
-                # kernel lane j's user sits at ``perm[lo + order[j]]`` in
-                # the original row order, so the dispatch can scatter the
-                # kernel output straight into the final array — one pass
-                # over [Q, N] instead of two.  Padding lanes route to the
-                # trash row ``n_users``.
-                ok = np.asarray(order) >= 0
-                dest = np.where(
-                    ok,
-                    state.perm[view.lo + np.clip(order, 0, None)],
-                    state.n_users,
-                ).astype(np.int64)
-                per_shard.append((xs_s, ys_s, dest, ok, ranks, block, base_q, planes_q))
-                t_filter[view.index] = time.perf_counter() - t0
+                with span("shard-filter", shard=view.index, backend=name) as sf:
+                    xs_s, ys_s, order, ranks, occ, block = backend._buckets_for(
+                        view.xs, view.ys, self.rect, req.grid_g, memo=view.memo
+                    )
+                    # the shard-local compaction double-whammy: only the cells
+                    # THIS shard's users occupy ship, and the plane list axis
+                    # pads to the longest live list in THIS region, not the
+                    # global max
+                    planes_q = stack_cell_planes(
+                        [p[occ] for p in full_planes],
+                        lane_pad=backend.lane_pad,
+                        compact=True,
+                    )
+                    base_q = np.stack([g.base[occ] for g in indexes]).astype(np.int32)
+                    xs_s = jax.device_put(xs_s, view.device)
+                    ys_s = jax.device_put(ys_s, view.device)
+                    # fuse the shard-local unsort with the global reassembly:
+                    # kernel lane j's user sits at ``perm[lo + order[j]]`` in
+                    # the original row order, so the dispatch can scatter the
+                    # kernel output straight into the final array — one pass
+                    # over [Q, N] instead of two.  Padding lanes route to the
+                    # trash row ``n_users``.
+                    ok = np.asarray(order) >= 0
+                    dest = np.where(
+                        ok,
+                        state.perm[view.lo + np.clip(order, 0, None)],
+                        state.n_users,
+                    ).astype(np.int64)
+                    per_shard.append(
+                        (xs_s, ys_s, dest, ok, ranks, block, base_q, planes_q)
+                    )
+                t_filter[view.index] = sf.elapsed_s
             self.engine._note_shard_filter(t_filter)
             return ("shard", per_shard)
         # dense / grid / bvh: prepared state is a pure function of the
         # replicated scenes — build it once, slice users per shard at
         # dispatch time
-        t0 = time.perf_counter()
-        shared = backend.prepare_batch(req)
-        t_filter = [(time.perf_counter() - t0) / state.n_shards] * state.n_shards
+        with span("shard-filter", shard=-1, backend=name, shared=1) as sf:
+            shared = backend.prepare_batch(req)
+        t_filter = [sf.elapsed_s / state.n_shards] * state.n_shards
         self.engine._note_shard_filter(t_filter)
         return ("shared", shared)
 
@@ -239,7 +241,8 @@ class ShardDispatch:
         for i, view in enumerate(state.views):
             if view.n_users == 0:
                 continue
-            t0 = time.perf_counter()
+            sv = span("shard-verify", shard=view.index, backend=name)
+            sv.__enter__()
             if kind == "shard":
                 xs_s, ys_s, dest, ok, ranks, block, base_q, planes_q = payload[i]
                 counts = np.asarray(
@@ -291,7 +294,8 @@ class ShardDispatch:
                 out_t[state.perm[view.lo:view.hi]] = slab.T
                 part = (slab < self.k).sum(axis=1).astype(np.int64)
             partials[view.index] = part
-            t_verify[view.index] = time.perf_counter() - t0
+            sv.__exit__(None, None, None)
+            t_verify[view.index] = sv.elapsed_s
         if out_t is None:  # pragma: no cover — n_users == 0 never dispatches
             return np.zeros((0, state.n_users), np.int32)
         n_q = out_t.shape[1]
@@ -356,6 +360,7 @@ class ShardedEngine(DynamicEngine):
         # base engine's `mesh=` kwarg is the training-style serve mesh —
         # deliberately NOT forwarded; the users mesh is this class's own
         super().__init__(facilities, users, config, rect=rect, **overrides)
+        self.metrics.gauge("shard.imbalance").set(1.0)
 
     # ------------------------------------------------------------------
     # the shard partition (lazy per snapshot; one atomic install)
@@ -411,27 +416,37 @@ class ShardedEngine(DynamicEngine):
         return ShardDispatch(self, state, backend, rect, k)
 
     # ------------------------------------------------------------------
-    # per-shard stats (EngineStats + explain())
+    # per-shard stats (metrics registry views; EngineStats + explain())
     # ------------------------------------------------------------------
-    def _ensure_shard_stats(self) -> None:
-        for field in (self.stats.shard_filter_s, self.stats.shard_verify_s):
-            while len(field) < self.n_shards:
-                field.append(0.0)
+    def _shard_hist(self, phase: str, i: int):
+        key = ("shard", phase, i)
+        h = self._metric_cache.get(key)
+        if h is None:
+            h = self._metric_cache[key] = self.metrics.histogram(
+                "shard.phase_s", phase=phase, shard=i
+            )
+        return h
 
     def _note_shard_filter(self, times: list[float]) -> None:
-        self._ensure_shard_stats()
+        # every shard observes (zeros included) so the per-shard view
+        # lists always span all n_shards entries
         for i, t in enumerate(times):
-            self.stats.shard_filter_s[i] += t
+            self._shard_hist("filter", i).observe(t)
 
     def _note_shard_verify(
         self, times, *, backend, version, per_shard_users, sizes
     ) -> None:
-        self._ensure_shard_stats()
+        tot = [0.0] * self.n_shards
         for i, t in enumerate(times):
-            self.stats.shard_verify_s[i] += t
-        tot = self.stats.shard_verify_s[: self.n_shards]
+            self._shard_hist("verify", i).observe(t)
+        for labels, h in self.metrics.find("shard.phase_s"):
+            if labels.get("phase") == "verify":
+                i = int(labels["shard"])
+                if 0 <= i < self.n_shards:
+                    tot[i] += h.sum
         mean = sum(tot) / max(len(tot), 1)
-        self.stats.shard_imbalance = (max(tot) / mean) if mean > 0 else 1.0
+        imbalance = (max(tot) / mean) if mean > 0 else 1.0
+        self.metrics.gauge("shard.imbalance").set(imbalance)
         self._shard_log.append(
             {
                 "mode": "shard-batch",
@@ -440,7 +455,7 @@ class ShardedEngine(DynamicEngine):
                 "shards": self.n_shards,
                 "per_shard_users": list(per_shard_users),
                 "per_shard_verify_s": [float(t) for t in times],
-                "imbalance": self.stats.shard_imbalance,
+                "imbalance": imbalance,
                 "result_sizes": [int(x) for x in np.asarray(sizes)],
             }
         )
