@@ -935,3 +935,106 @@ def obs_overhead(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]
             ),
         )
     ]
+
+
+# ----------------------------------------------- health-layer overhead (ours)
+def health_overhead(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+    """The full production-health tax over obs-only serving.
+
+    Baseline arm: tracing-enabled serving (exactly what ``obs_overhead``
+    measures as its "on" arm).  Health arm adds everything PR 9 bolts on
+    in production: an armed :class:`FlightRecorder` on the engine, a live
+    :class:`ObsServer`, and a concurrent scraper thread hitting
+    ``/metrics`` + ``/healthz`` at a paced interval while the engine
+    serves.  Interleaved best-of per arm, same batch.  Gate:
+    ``ratio <= 1.05`` (the whole health layer costs at most 5% over
+    obs-only serving).
+    """
+    import http.client
+    import tempfile
+    import threading
+
+    from repro.obs import Tracer, get_tracer, set_tracer
+    from repro.obs.flight import FlightRecorder
+
+    rng = np.random.default_rng(0)
+    F, U = _fu("CAL", 400, scale)
+    q_n = n_queries or 16
+    qs = [int(q) for q in rng.integers(0, len(F), q_n)]
+    eng = RkNNEngine(F, U, RkNNConfig(backend="grid"))
+    eng.query_batch(qs, 10)  # jit + scene/prepared caches warm
+    eng.query_batch(qs, 10)
+    prev = set_tracer(Tracer())  # fresh rings; global state restored below
+    best = {"base": np.inf, "health": np.inf}
+    counts = {"scrapes": 0, "errors": 0}
+    srv = None
+    try:
+        tracer = get_tracer()
+        tracer.enabled = True  # both arms serve with tracing on
+        srv = eng.serve_obs(port=0)
+        recorder = FlightRecorder(eng, dir=tempfile.mkdtemp(prefix="flight_"))
+        scraping = threading.Event()
+        stop = threading.Event()
+
+        def _scraper() -> None:
+            # Persistent keep-alive connection, like a real Prometheus
+            # scraper — per-request TCP setup would otherwise dominate
+            # the measured cost of the endpoints themselves.
+            conn = http.client.HTTPConnection("127.0.0.1", srv.port, timeout=2)
+            while not stop.is_set():
+                if not scraping.is_set():
+                    stop.wait(0.005)
+                    continue
+                for route in ("/metrics", "/healthz"):
+                    try:
+                        conn.request("GET", route)
+                        r = conn.getresponse()
+                        r.read()
+                        # /healthz legitimately serves 503 when a rule
+                        # trips; anything else non-200 is an error.
+                        if r.status not in (200, 503):
+                            counts["errors"] += 1
+                    except Exception:
+                        counts["errors"] += 1
+                        conn.close()  # reconnect on next request
+                counts["scrapes"] += 1
+                # Paced at ~5 scrapes/s — nearly two orders of magnitude
+                # hotter than a production Prometheus interval, without
+                # turning the bench into a CPU-contention microbenchmark
+                # on single-core runners.
+                stop.wait(0.2)
+            conn.close()
+
+        th = threading.Thread(target=_scraper, daemon=True)
+        th.start()
+        for _ in range(9):
+            for mode in ("base", "health"):
+                if mode == "health":
+                    eng.flight = recorder
+                    scraping.set()
+                else:
+                    eng.flight = None
+                    scraping.clear()
+                    stop.wait(0.03)  # let an in-flight scrape drain
+                t0 = time.perf_counter()
+                eng.query_batch(qs, 10)
+                best[mode] = min(best[mode], time.perf_counter() - t0)
+        stop.set()
+        th.join(timeout=2)
+    finally:
+        eng.flight = None
+        if srv is not None:
+            srv.close()
+        set_tracer(prev)
+    ratio = best["health"] / max(best["base"], 1e-12)
+    return [
+        dict(
+            name="health_overhead",
+            us_per_call=best["health"] / q_n * 1e6,
+            derived=(
+                f"ratio={ratio:.3f} ok={ratio <= 1.05} "
+                f"base={best['base']*1e3:.2f}ms health={best['health']*1e3:.2f}ms "
+                f"scrapes={counts['scrapes']} errors={counts['errors']} Q={q_n}"
+            ),
+        )
+    ]

@@ -16,6 +16,12 @@ set).
 trajectory (one CSV row per recorded measurement, tagged with its PR
 number) instead of running anything — the cross-PR performance story in
 one grep-able stream.
+``--trend --gate`` additionally evaluates the trajectory against the
+declared per-metric tolerances (``TREND_GATES``) and exits non-zero on
+any regression — the bench trajectory as an enforced contract, not a
+printout.  Each gate checks the *latest* committed point of every
+matching artefact (history is context, not a verdict: a regression that
+was already fixed stays visible in the trajectory without failing CI).
 """
 
 from __future__ import annotations
@@ -51,7 +57,125 @@ BENCHES = [
     ("mono", bench_rknn.mono_queries),
     ("sharded_scaling", bench_rknn.sharded_scaling),
     ("obs_overhead", bench_rknn.obs_overhead),
+    ("health_overhead", bench_rknn.health_overhead),
 ]
+
+#: The declared cross-PR tolerances (``--trend --gate``).  ``row`` is a
+#: substring filter on artefact names; ``key`` extracts a ``key=value``
+#: KPI from the derived string (suffixes like ``x``/``ms`` stripped) and
+#: is checked against ``min``/``max``; ``flag`` requires a literal token
+#: in the derived string.  ``fallback_flag`` passes a row whose KPI is
+#: absent (older artefact shapes).  Values mirror the per-bench CI
+#: assertions so the trajectory gate and the fresh-run gates agree.
+TREND_GATES = [
+    dict(id="obs-overhead", row="obs_overhead", key="ratio", max=1.03),
+    dict(id="health-overhead", row="health_overhead", key="ratio", max=1.05),
+    dict(id="planner-drift", row="planner_drift", key="worst_abs_median", max=1.5),
+    dict(
+        id="scenario-aggregate",
+        row="scenario_aggregate",
+        key="agg_ratio",
+        max=1.25,
+        fallback_flag="beats_all=True",
+    ),
+    dict(id="mvcc-concurrent", row="update_concurrent", flag="within2x=True"),
+    dict(id="mvcc-stale", row="update_concurrent", flag="stale_mix=0"),
+    dict(id="shard-scaling-monotone", row="_scaling", flag="monotone=True"),
+    dict(id="shard-scaling-speedup", row="_scaling", key="s1/s4", min=1.5),
+    dict(id="refit-drift-win", row="update_drift", key="speedup", min=1.0),
+]
+
+_NUM_RE = re.compile(r"-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")
+
+
+def _kpi(derived: str, key: str) -> float | None:
+    """Extract ``key=<number>`` from a derived string (unit suffixes like
+    ``x`` / ``ms`` ignored); ``None`` when the key is absent."""
+    for tok in derived.replace(";", " ").split():
+        k, eq, v = tok.partition("=")
+        if eq and k == key:
+            m = _NUM_RE.match(v)
+            return float(m.group(0)) if m else None
+    return None
+
+
+def _load_results(paths: list[str] | None = None) -> list[tuple[int, list[dict]]]:
+    if paths is None:
+        results = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "results"
+        )
+        paths = glob.glob(os.path.join(results, "BENCH_*.json"))
+    out = []
+    for path in sorted(
+        paths, key=lambda p: int(re.search(r"BENCH_(\d+)", p).group(1))
+    ):
+        with open(path) as f:
+            payload = json.load(f)
+        pr = int(re.search(r"BENCH_(\d+)", path).group(1))
+        out.append((pr, payload.get("rows", [])))
+    return out
+
+
+def evaluate_trend(paths: list[str] | None = None) -> dict:
+    """Grade the committed trajectory against :data:`TREND_GATES`.
+
+    Returns ``{"lines": [...], "failures": [...]}`` — one line per
+    (gate, artefact) with the full cross-PR KPI trajectory and the
+    verdict on the latest point; failures collect the lines that fail.
+    Usable directly from tests (pass explicit paths for fixtures).
+    """
+    data = _load_results(paths)
+    lines: list[str] = []
+    failures: list[str] = []
+    for gate in TREND_GATES:
+        series: dict[str, list[tuple[int, str]]] = {}
+        for pr, rows in data:
+            for r in rows:
+                if gate["row"] in r.get("name", ""):
+                    series.setdefault(r["name"], []).append(
+                        (pr, str(r.get("derived", "")))
+                    )
+        if not series:
+            lines.append(f"SKIP {gate['id']}: no committed data")
+            continue
+        for name, pts in sorted(series.items()):
+            pts.sort(key=lambda t: t[0])
+            latest_pr, derived = pts[-1]
+            verdict, shown = _grade(gate, derived)
+            traj = " ".join(
+                f"pr{pr}:{_kpi(d, gate['key']) if 'key' in gate else ('ok' if gate['flag'] in d else 'FAIL')}"
+                for pr, d in pts
+            )
+            line = (
+                f"{'PASS' if verdict else 'FAIL'} {gate['id']}: {name} "
+                f"latest=pr{latest_pr} {shown} | {traj}"
+            )
+            lines.append(line)
+            if not verdict:
+                failures.append(line)
+    return {"lines": lines, "failures": failures}
+
+
+def _grade(gate: dict, derived: str) -> tuple[bool, str]:
+    """Verdict for one artefact's latest derived string under one gate."""
+    if "key" in gate:
+        v = _kpi(derived, gate["key"])
+        if v is None:
+            fb = gate.get("fallback_flag")
+            if fb is not None:
+                ok = fb in derived
+                return ok, f"{fb} {'present' if ok else 'ABSENT'}"
+            return False, f"{gate['key']} missing"
+        lo, hi = gate.get("min"), gate.get("max")
+        if hi is not None and v > hi:
+            return False, f"{gate['key']}={v:g} > max {hi:g}"
+        if lo is not None and v < lo:
+            return False, f"{gate['key']}={v:g} < min {lo:g}"
+        bound = f"<= {hi:g}" if hi is not None else f">= {lo:g}"
+        return True, f"{gate['key']}={v:g} ({bound})"
+    flag = gate["flag"]
+    ok = flag in derived
+    return ok, f"{flag} {'present' if ok else 'ABSENT'}"
 
 
 def print_trend() -> None:
@@ -127,9 +251,27 @@ def main() -> None:
         help="print the committed benchmarks/results/BENCH_*.json "
         "trajectory as CSV and exit (runs nothing)",
     )
+    ap.add_argument(
+        "--gate",
+        action="store_true",
+        help="with --trend: grade the trajectory against the declared "
+        "TREND_GATES tolerances and exit non-zero on any regression",
+    )
     args = ap.parse_args()
     if args.trend:
         print_trend()
+        if args.gate:
+            report = evaluate_trend()
+            print("\n# trend gate:", file=sys.stderr)
+            for line in report["lines"]:
+                print(f"# {line}", file=sys.stderr)
+            if report["failures"]:
+                print(
+                    f"# trend gate: {len(report['failures'])} regression(s)",
+                    file=sys.stderr,
+                )
+                sys.exit(1)
+            print("# trend gate: green", file=sys.stderr)
         return
 
     if args.trace:

@@ -36,6 +36,7 @@ import dataclasses
 import math
 import queue
 import threading
+import time
 from typing import Any
 
 import numpy as np
@@ -54,7 +55,7 @@ from repro.core.hybrid import SceneCache, _q_key
 from repro.core.results import RkNNBatchResult, RkNNResult
 from repro.core.scene import Scene, build_scene
 from repro.core.snapshot import EngineSnapshot
-from repro.obs import Histogram, MetricsRegistry, span
+from repro.obs import Histogram, MetricsRegistry, span, track_jit
 from repro.planner.models import WorkloadShape
 
 __all__ = ["RkNNConfig", "EngineStats", "RkNNEngine", "serve_shardings"]
@@ -101,6 +102,11 @@ class RkNNConfig:
     #: Feed the planner's observed-vs-predicted residuals back into the
     #: active profile's coefficients (damped; ``auto`` backend only).
     online_recalibration: bool = False
+    #: Arm a :class:`repro.obs.FlightRecorder` at construction: any
+    #: reader/writer exception (and sentinel trips) dumps a postmortem
+    #: bundle under ``flight_dir``.
+    flight_recorder: bool = False
+    flight_dir: str = "flight"
 
 
 class EngineStats:
@@ -304,6 +310,17 @@ class RkNNEngine:
         self._read_clock = 0
         self._mesh_steps: dict = {}  # (backend, statics) -> jitted dispatch
         self._plan_log: "collections.deque[dict]" = collections.deque(maxlen=128)
+        #: Health layer (all optional, never on the hot path): a flight
+        #: recorder armed by config, a lazily-built sentinel, any live
+        #: introspection servers, and the device-bytes scrape memo.
+        self.flight = None
+        self._sentinel = None
+        self._obs_servers: list = []
+        self._devbytes_cache: tuple | None = None
+        if config.flight_recorder:
+            from repro.obs.flight import FlightRecorder
+
+            self.flight = FlightRecorder(self, dir=config.flight_dir)
         if mesh is not None:
             self._init_mesh(self._snap, mesh)
 
@@ -357,6 +374,18 @@ class RkNNEngine:
         m.derived("batch_cache.hit_ratio", self._batch_cache_hit_ratio)
         m.derived("mvcc.version", lambda: float(self._snap.version))
         m.derived("pad_waste", self._pad_waste_ratio)
+        # Device-memory accounting of the *served* snapshot version, by
+        # category (evaluated only at scrape/snapshot time; one memoized
+        # walk serves all categories — see _device_bytes_cached).
+        for cat in ("users", "shards", "indexes", "kernel", "batches",
+                    "scenes", "total"):
+            m.derived(
+                "mem.bytes",
+                (lambda cat=cat: float(
+                    self._device_bytes_cached(self._snap).get(cat, 0)
+                )),
+                category=cat,
+            )
 
     def _scene_cache_hit_ratio(self) -> float | None:
         sc = self._snap.scene_cache
@@ -401,6 +430,65 @@ class RkNNEngine:
                 "planner.residual", signed=True, backend=backend
             )
         return h
+
+    # ------------------------------------------------------------------
+    # health layer (live introspection, SLO sentinel, flight recorder)
+    # ------------------------------------------------------------------
+    def serve_obs(self, port: int = 0, host: str = "127.0.0.1"):
+        """Boot the live introspection endpoint for this engine
+        (``/metrics``, ``/spans``, ``/explain``, ``/snapshot``,
+        ``/healthz``) on a daemon thread.  ``port=0`` binds an ephemeral
+        port — read it back from the returned server's ``.port``/``.url``.
+        Read-only and lock-free; see :mod:`repro.obs.health.server`."""
+        from repro.obs.health import ObsServer
+
+        srv = ObsServer(self, port=port, host=host)
+        self._obs_servers.append(srv)
+        return srv
+
+    @property
+    def sentinel(self):
+        """The engine's SLO sentinel (built on first touch with the
+        default rule families — see :func:`repro.obs.engine_rules`).
+        Drives ``/healthz``; a sustained breach dumps a flight bundle
+        when a recorder is armed."""
+        s = self._sentinel
+        if s is None:
+            from repro.obs.sentinel import Sentinel, engine_rules
+
+            rules, discover = engine_rules(self)
+
+            def on_trip(st) -> None:
+                fr = self.flight
+                if fr is not None:
+                    fr.dump(f"slo:{st.rule.name}")
+
+            # benign first-touch race: two racing builders produce
+            # equivalent sentinels, last assignment wins
+            s = self._sentinel = Sentinel(
+                rules, on_trip=on_trip, discover=discover
+            )
+        return s
+
+    def _flight_exception(self, where: str, exc: BaseException) -> None:
+        """Dump a postmortem bundle when a recorder is armed (never
+        raises; never runs when flight is off — the common case costs
+        one attribute read on the exception path only)."""
+        fr = self.flight
+        if fr is not None:
+            fr.record_exception(where, exc)
+
+    def _device_bytes_cached(self, snap: EngineSnapshot) -> dict[str, int]:
+        """Memoized :meth:`EngineSnapshot.device_bytes` — one walk per
+        snapshot version per ~250ms, so a scrape hitting all seven
+        ``mem.bytes`` gauges (or `/snapshot` plus `/metrics`) pays once."""
+        now = time.monotonic()
+        hit = self._devbytes_cache
+        if hit is not None and hit[0] is snap and now - hit[1] < 0.25:
+            return hit[2]
+        out = snap.device_bytes()
+        self._devbytes_cache = (snap, now, out)
+        return out
 
     # ------------------------------------------------------------------
     # snapshot delegation (compat surface; query paths resolve _snap once)
@@ -504,10 +592,13 @@ class RkNNEngine:
             if step is None:
                 from repro.kernels.ref import raycast_count_batch_ref
 
-                step = jax.jit(
-                    raycast_count_batch_ref,
-                    in_shardings=(user_sh, user_sh, self._mesh_q_sharding(4)),
-                    out_shardings=out_sh,
+                step = track_jit(
+                    jax.jit(
+                        raycast_count_batch_ref,
+                        in_shardings=(user_sh, user_sh, self._mesh_q_sharding(4)),
+                        out_shardings=out_sh,
+                    ),
+                    "mesh.dense-ref",
                 )
                 self._mesh_steps[key] = step
             return lambda prepared: np.asarray(
@@ -538,16 +629,19 @@ class RkNNEngine:
                         xs, ys, base, lists, coeffs, rect, G
                     )
 
-                step = jax.jit(
-                    _grid_fn,
-                    in_shardings=(
-                        user_sh,
-                        user_sh,
-                        self._mesh_q_sharding(2),
-                        self._mesh_q_sharding(3),
-                        self._mesh_q_sharding(4),
+                step = track_jit(
+                    jax.jit(
+                        _grid_fn,
+                        in_shardings=(
+                            user_sh,
+                            user_sh,
+                            self._mesh_q_sharding(2),
+                            self._mesh_q_sharding(3),
+                            self._mesh_q_sharding(4),
+                        ),
+                        out_shardings=out_sh,
                     ),
-                    out_shardings=out_sh,
+                    "mesh.grid",
                 )
                 self._mesh_steps[key] = step
             return lambda prepared: np.asarray(
@@ -568,17 +662,20 @@ class RkNNEngine:
                         xs, ys, left, right, bbox, coeffs, k=k
                     )
 
-                step = jax.jit(
-                    _bvh_fn,
-                    in_shardings=(
-                        user_sh,
-                        user_sh,
-                        self._mesh_q_sharding(2),
-                        self._mesh_q_sharding(2),
-                        self._mesh_q_sharding(3),
-                        self._mesh_q_sharding(4),
+                step = track_jit(
+                    jax.jit(
+                        _bvh_fn,
+                        in_shardings=(
+                            user_sh,
+                            user_sh,
+                            self._mesh_q_sharding(2),
+                            self._mesh_q_sharding(2),
+                            self._mesh_q_sharding(3),
+                            self._mesh_q_sharding(4),
+                        ),
+                        out_shardings=out_sh,
                     ),
-                    out_shardings=out_sh,
+                    "mesh.bvh",
                 )
                 self._mesh_steps[key] = step
             return lambda prepared: np.asarray(
@@ -825,7 +922,11 @@ class RkNNEngine:
         concrete choice and :meth:`explain` the full plan.
         """
         self._read_clock += 1
-        return self._query(self._snap, q, k, backend=backend)
+        try:
+            return self._query(self._snap, q, k, backend=backend)
+        except Exception as e:
+            self._flight_exception("query", e)
+            raise
 
     def _query(
         self, snap: EngineSnapshot, q, k: int, *, backend: str | None = None
@@ -916,9 +1017,13 @@ class RkNNEngine:
         backends).
         """
         self._read_clock += 1
-        return self._query_batch(
-            self._snap, qs, k, backend=backend, scene_workers=scene_workers
-        )
+        try:
+            return self._query_batch(
+                self._snap, qs, k, backend=backend, scene_workers=scene_workers
+            )
+        except Exception as e:
+            self._flight_exception("query_batch", e)
+            raise
 
     def _query_batch(
         self,
@@ -1238,6 +1343,13 @@ class RkNNEngine:
         self-hit-corrects the counts — see docs/API.md for the derivation.
         """
         self._read_clock += 1
+        try:
+            return self._query_mono(int(q_idx), k, backend=backend)
+        except Exception as e:
+            self._flight_exception("query_mono", e)
+            raise
+
+    def _query_mono(self, q_idx: int, k: int, *, backend: str | None) -> RkNNResult:
         snap = self._snap
         if snap._is_mono is None:
             snap._is_mono = snap.users is snap.facilities or (
@@ -1366,6 +1478,8 @@ class RkNNEngine:
             if item is None:
                 return
             if isinstance(item, BaseException):
+                if isinstance(item, Exception):
+                    self._flight_exception("stream", item)
                 raise item
             batch, q_n, b_eff, plan, t_filter, (req, prepared, scenes) = item
             with span("verify", backend=b_eff.name, stream=1) as sv:

@@ -441,3 +441,15 @@ def grid_hit_counts_jnp(xs, ys, base, lists, coeffs, rect: Rect, G: int):
     ev = e[..., 0] * xs[:, None, None] + e[..., 1] * ys[:, None, None] + e[..., 2]
     inside = jnp.all(ev >= 0.0, axis=-1) & (cand >= 0)
     return jnp.asarray(base)[cell] + inside.sum(axis=-1).astype(jnp.int32)
+
+
+# compile accounting (see repro.obs.jitmon): the grid jnp entries retrace
+# per (rect, G) static combo — expected on updates that move the hull, a
+# regression when a transient rect leaks into the hot path.  Wrapped at
+# module bottom so every importer sees the counted version.
+from repro.obs.jitmon import track_jit as _track_jit  # noqa: E402
+
+grid_hit_counts_jnp = _track_jit(grid_hit_counts_jnp, "grid_jnp")
+grid_hit_counts_batch_jnp = _track_jit(
+    grid_hit_counts_batch_jnp, "grid_jnp_batch"
+)

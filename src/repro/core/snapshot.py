@@ -32,6 +32,7 @@ wins — a benign race, not a correctness hazard.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 from typing import Any
 
@@ -282,3 +283,67 @@ class EngineSnapshot:
             )
             self._pad_waste[key] = hit
         return hit
+
+    def device_bytes(self) -> dict[str, int]:
+        """Live array bytes owned by this snapshot version, by category.
+
+        Walks the snapshot's caches/memos and sums ``nbytes`` of every
+        reachable jax/numpy array exactly once (an id-based seen set is
+        shared across categories, so structurally-shared arrays — COW
+        carries, replicated planes — are charged to the first category
+        that reaches them and the total never double counts).  Read-only
+        over lock-free accessors; an update publishing mid-walk at worst
+        skews one scrape, never tears it.
+        """
+        seen: set[int] = set()
+        # order matters for attribution (not for the total): scenes walk
+        # before the index memo so packed occluder geometry lands under
+        # "scenes" and the memo contributes only the index-side arrays.
+        out = {
+            "users": _nbytes_walk(
+                (self.users, self.facilities, self._xs, self._ys,
+                 self.mesh_xs, self.mesh_ys),
+                seen,
+            ),
+            "shards": _nbytes_walk(self.shard_state, seen),
+            "scenes": _nbytes_walk(
+                self.scene_cache.scenes() if self.scene_cache is not None else None,
+                seen,
+            ),
+            "indexes": _nbytes_walk(list(self.index_memo._store.values()), seen),
+            "kernel": _nbytes_walk(self.kernel_memo.items(), seen),
+            "batches": _nbytes_walk(self.batch_cache.items(), seen),
+        }
+        out["total"] = sum(out.values())
+        return out
+
+
+_ATOMS = (str, bytes, int, float, bool, type(None))
+
+
+def _nbytes_walk(obj, seen: set[int]) -> int:
+    """Sum of ``nbytes`` over every array reachable from ``obj`` through
+    dicts/sequences/dataclasses/``__slots__`` objects, deduplicated by
+    identity."""
+    if isinstance(obj, _ATOMS):
+        return 0
+    oid = id(obj)
+    if oid in seen:
+        return 0
+    seen.add(oid)
+    nb = getattr(obj, "nbytes", None)
+    if nb is not None and isinstance(nb, (int, np.integer)):
+        return int(nb)
+    if isinstance(obj, dict):
+        return sum(_nbytes_walk(v, seen) for v in obj.values())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return sum(_nbytes_walk(v, seen) for v in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(
+            _nbytes_walk(getattr(obj, f.name, None), seen)
+            for f in dataclasses.fields(obj)
+        )
+    slots = getattr(type(obj), "__slots__", None)
+    if slots:
+        return sum(_nbytes_walk(getattr(obj, s, None), seen) for s in slots)
+    return 0

@@ -196,6 +196,15 @@ class DynamicEngine(RkNNEngine):
             batch = UpdateBatch(**deltas)
         elif deltas:
             raise TypeError("pass either an UpdateBatch or keyword deltas, not both")
+        try:
+            return self._apply_updates_guarded(batch)
+        except Exception as e:
+            # black box: a writer crash leaves the engine serving the old
+            # (still consistent) snapshot — dump what it was doing first
+            self._flight_exception("apply_updates", e)
+            raise
+
+    def _apply_updates_guarded(self, batch: UpdateBatch) -> UpdateReport:
         with self._writer_lock:
             # Deprioritize the whole writer pass *dynamically*: the ratio
             # flips from 0 to 2.0 the moment a concurrent reader bumps the

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.obs.jitmon import track_jit
 from repro.kernels.raycast import (
     raycast_count_batch_kernel_call,
     raycast_count_kernel_call,
@@ -402,3 +403,24 @@ def rank_count_batch(users, facilities, q_pts, *, exclude=None):
             fy = fy.at[rows, excl[rows]].set(jnp.inf)
     thr = (xs[None, :] - q_pts[:, 0, None]) ** 2 + (ys[None, :] - q_pts[:, 1, None]) ** 2
     return _rank_batch_ref_jit(xs, ys, fx, fy, thr)
+
+
+# ---------------------------------------------------------------------------
+# compile accounting: every module-level jitted reference entry point is
+# wrapped so an unexpected retrace (a pad-bucket miss storm reshaping the
+# dense oracle, a chunk-size change) surfaces as ``compile.count{fn=...}``
+# in the process metrics registry instead of a mystery latency spike.
+# ---------------------------------------------------------------------------
+_raycast_ref_chunked = track_jit(_raycast_ref_chunked, "raycast_ref")
+_rank_ref_jit = track_jit(_rank_ref_jit, "rank_ref")
+_raycast_batch_ref_jit = track_jit(_raycast_batch_ref_jit, "raycast_batch_ref")
+_raycast_batch_ref_chunked = track_jit(
+    _raycast_batch_ref_chunked, "raycast_batch_ref_chunked"
+)
+_grid_cells_batch_ref_chunked = track_jit(
+    _grid_cells_batch_ref_chunked, "grid_cells_batch_ref_chunked"
+)
+_grid_cells_batch_ref_jit = track_jit(
+    _grid_cells_batch_ref_jit, "grid_cells_batch_ref"
+)
+_rank_batch_ref_jit = track_jit(_rank_batch_ref_jit, "rank_batch_ref")

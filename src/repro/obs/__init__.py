@@ -20,7 +20,7 @@ Quickstart::
     print(obs.metrics_snapshot(eng.metrics))
 """
 
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, process_registry
 from .trace import (
     Span,
     SpanRing,
@@ -37,6 +37,20 @@ from .export import (
     spans,
     summarize,
     write_chrome_trace,
+)
+from .flight import FlightRecorder
+from .jitmon import track_jit
+from .promtext import render_registries, render_snapshot
+from .sentinel import Rule, Sentinel, engine_rules
+
+# Process-wide obs self-telemetry: ring saturation and intern-table
+# saturation of the *current* global tracer, visible on every /metrics
+# scrape and in every flight bundle (derived → zero hot-path cost).
+process_registry().derived(
+    "obs.intern_overflow", lambda: float(get_tracer().intern_overflows)
+)
+process_registry().derived(
+    "obs.spans_dropped", lambda: float(get_tracer().dropped)
 )
 
 __all__ = [
@@ -57,4 +71,12 @@ __all__ = [
     "spans",
     "summarize",
     "write_chrome_trace",
+    "process_registry",
+    "FlightRecorder",
+    "track_jit",
+    "render_registries",
+    "render_snapshot",
+    "Rule",
+    "Sentinel",
+    "engine_rules",
 ]

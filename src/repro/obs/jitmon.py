@@ -1,0 +1,69 @@
+"""Retrace/compile accounting for ``jax.jit`` entry points.
+
+An accidental recompile (a pad-bucket miss storm, a shape leak through
+the planner's grouping) shows up today as a mystery latency spike.
+:func:`track_jit` wraps a jitted callable and, after every call,
+compares the callable's compilation-cache size against the last
+observation — growth means this call traced+compiled, so the wrapper
+charges the call's wall time to ``compile.time_s{fn=...}`` and bumps
+``compile.count{fn=...}`` in the process-wide registry.
+
+Cost when nothing compiles: one ``perf_counter`` pair plus a
+``_cache_size()`` lookup per call — noise next to a kernel dispatch.
+The cache-size probe is versioned across jax releases; when absent the
+wrapper degrades to counting nothing (never to breaking the call).
+
+The attribution is per *wrapped callable*, which matches how the engine
+jits: each mesh step / reference kernel is its own ``jax.jit`` object,
+so cache growth on the wrapper's function is exactly "this entry point
+retraced".
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from .metrics import process_registry
+
+__all__ = ["track_jit"]
+
+
+def _cache_size(fn) -> int | None:
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+def track_jit(fn, name: str):
+    """Wrap a jitted callable; compiles surface as ``compile.count{fn}``
+    and ``compile.time_s{fn}`` in :func:`process_registry`.
+
+    Returns ``fn`` unchanged when the compilation-cache probe is
+    unavailable (non-jit callable, or a jax without ``_cache_size``).
+    """
+    if _cache_size(fn) is None:
+        return fn
+    reg = process_registry()
+    count = reg.counter("compile.count", fn=name)
+    time_s = reg.counter("compile.time_s", fn=name)
+    state = {"n": _cache_size(fn) or 0}
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        n = _cache_size(fn)
+        if n is not None and n > state["n"]:
+            count.inc(n - state["n"])
+            time_s.inc(time.perf_counter() - t0)
+            state["n"] = n
+        return out
+
+    wrapper.lower = getattr(fn, "lower", None)
+    wrapper.__wrapped_jit__ = fn
+    return wrapper

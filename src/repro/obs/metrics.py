@@ -31,6 +31,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "process_registry",
 ]
 
 #: Geometric bucket layout: ratio 10^(1/BUCKETS_PER_DECADE) between
@@ -64,14 +65,18 @@ def _mag_value(idx: int) -> float:
 
 
 class Counter:
-    """Monotone counter (GIL-atomic ``inc`` — single Python int add)."""
+    """Monotone counter (GIL-atomic ``inc`` — single Python add).
+
+    Increments are usually integers (events); float increments are
+    allowed for monotone accumulated quantities (``compile.time_s``).
+    """
 
     __slots__ = ("value",)
 
     def __init__(self):
         self.value = 0
 
-    def inc(self, n: int = 1) -> None:
+    def inc(self, n: int | float = 1) -> None:
         self.value += n
 
 
@@ -198,6 +203,41 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def _upper_edge(self, idx: int) -> float:
+        """Upper bucket boundary (the Prometheus ``le`` value) of slot
+        ``idx``; ``inf`` for the positive overflow bucket."""
+        if self.signed:
+            zero = _N_MAG + 1
+            if idx == zero:
+                return LO  # zero bucket covers (-LO, LO)
+            if idx > zero:
+                b = idx - zero - 1  # positive magnitude bucket
+                if b >= _N_MAG:
+                    return math.inf
+                return 10.0 ** (_LOG_LO + (b + 1) / BUCKETS_PER_DECADE)
+            b = zero - 1 - idx  # negative magnitude bucket
+            # covers (-10^(lo+(b+1)/BPD), -10^(lo+b/BPD)]
+            return -(10.0 ** (_LOG_LO + b / BUCKETS_PER_DECADE))
+        if idx == 0:
+            return LO
+        b = idx - 1
+        if b >= _N_MAG:
+            return math.inf
+        return 10.0 ** (_LOG_LO + (b + 1) / BUCKETS_PER_DECADE)
+
+    def cumulative_buckets(self) -> list[tuple[float, int]]:
+        """Non-empty buckets as Prometheus-style cumulative
+        ``(upper_edge, count_le)`` pairs, ascending.  Only occupied
+        buckets are emitted (the renderer appends ``+Inf`` = count), so
+        exposition size tracks the observed spread, not the layout."""
+        out: list[tuple[float, int]] = []
+        acc = 0
+        for idx, c in enumerate(self.counts):
+            if c:
+                acc += int(c)
+                out.append((self._upper_edge(idx), acc))
+        return out
+
     def summary(self) -> dict:
         """Flat snapshot row: count/sum/mean and the headline quantiles."""
         if self.count == 0:
@@ -267,6 +307,29 @@ class MetricsRegistry:
             self._derived[(name, _label_key(labels))] = fn
 
     # ---- read side --------------------------------------------------------
+    def items(self) -> list[tuple[str, dict, object]]:
+        """Every live metric as ``(name, labels, metric)`` — the object
+        view the Prometheus renderer needs (bucket counts, not just the
+        quantile summary :meth:`snapshot` flattens to)."""
+        with self._lock:
+            items = sorted(self._store.items())
+        return [(k[0], dict(k[1]), m) for k, m in items]
+
+    def derived_items(self) -> list[tuple[str, dict, float]]:
+        """Derived gauges evaluated now, as ``(name, labels, value)``;
+        rows whose callable fails or returns ``None`` are omitted."""
+        with self._lock:
+            derived = sorted(self._derived.items())
+        out = []
+        for (name, key), fn in derived:
+            try:
+                v = fn()
+            except Exception:
+                v = None
+            if v is not None:
+                out.append((name, dict(key), float(v)))
+        return out
+
     def find(self, name: str) -> list[tuple[dict, object]]:
         """All metrics registered under ``name`` as (labels, metric)."""
         with self._lock:
@@ -297,3 +360,14 @@ class MetricsRegistry:
             if v is not None:
                 out[_fmt_key(*key)] = v
         return out
+
+
+#: Process-wide registry for metrics that are not per-engine: jit
+#: compile counts, span-ring intern overflows, flight-recorder activity.
+#: Engines merge it into their own exposition (``/metrics``, flight
+#: bundles) so process facts travel with every engine's scrape.
+_PROCESS = MetricsRegistry()
+
+
+def process_registry() -> MetricsRegistry:
+    return _PROCESS

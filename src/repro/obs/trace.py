@@ -64,13 +64,21 @@ MAX_INTERNED = 1 << 16
 
 
 class _Interner:
-    """Process-wide value → small-int id table (insert-locked reads-free)."""
+    """Process-wide value → small-int id table (insert-locked reads-free).
+
+    Saturation is *counted*, not silent: once the table is full every
+    novel value maps to the pre-seeded sentinel id 0 and bumps
+    ``overflows``, which the obs layer surfaces as the
+    ``obs.intern_overflow`` gauge so a postmortem can tell "these spans
+    all collapsed to <overflow>" from "the workload really was uniform".
+    """
 
     def __init__(self, cap: int = MAX_INTERNED):
         self._lock = threading.Lock()
         self._ids: dict = {}
         self._values: list = []
         self._cap = cap
+        self.overflows = 0  # novel values refused after saturation
 
     def intern(self, value) -> int:
         hit = self._ids.get(value)  # GIL-atomic read, no lock
@@ -81,6 +89,7 @@ class _Interner:
             if hit is not None:
                 return hit
             if len(self._values) >= self._cap:
+                self.overflows += 1
                 return 0  # overflow sentinel (id 0 is always pre-seeded)
             idx = len(self._values)
             self._values.append(value)
@@ -206,11 +215,12 @@ class Tracer:
     flips so a recording can be inspected after disabling.
     """
 
-    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 max_interned: int = MAX_INTERNED):
         self.capacity = int(capacity)
         self.enabled = False
-        self.names = _Interner()
-        self.attrs = _Interner()
+        self.names = _Interner(max_interned)
+        self.attrs = _Interner(max_interned)
         self.names.intern("<overflow>")  # seed id 0 for both tables
         self.attrs.intern(())
         self._local = threading.local()
@@ -261,6 +271,12 @@ class Tracer:
         self._local = threading.local()
 
     # ---- read side --------------------------------------------------------
+    @property
+    def intern_overflows(self) -> int:
+        """Novel names/attr-tuples refused since the intern tables
+        saturated (their spans carry the sentinel id 0)."""
+        return self.names.overflows + self.attrs.overflows
+
     @property
     def dropped(self) -> int:
         with self._rings_lock:

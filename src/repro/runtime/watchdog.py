@@ -76,15 +76,30 @@ class StepWatchdog:
 
 
 class HangTimer:
-    """Hard per-step deadline; calls ``on_hang`` from a daemon thread."""
+    """Hard per-step deadline; calls ``on_hang`` from a daemon thread.
 
-    def __init__(self, deadline_s: float, on_hang):
+    ``flight`` (optional) is a :class:`repro.obs.FlightRecorder`: a hang
+    dumps a postmortem bundle *before* the mitigation callback runs, so
+    the spans/metrics of the wedged step survive whatever the mitigation
+    does to the process.
+    """
+
+    def __init__(self, deadline_s: float, on_hang, *, flight=None):
         self.deadline = deadline_s
         self.on_hang = on_hang
+        self.flight = flight
         self._timer: threading.Timer | None = None
 
+    def _fire(self) -> None:
+        if self.flight is not None:
+            try:
+                self.flight.dump("hang")
+            except Exception:
+                pass  # the black box must never mask the mitigation
+        self.on_hang()
+
     def __enter__(self):
-        self._timer = threading.Timer(self.deadline, self.on_hang)
+        self._timer = threading.Timer(self.deadline, self._fire)
         self._timer.daemon = True
         self._timer.start()
         return self

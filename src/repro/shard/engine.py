@@ -122,6 +122,30 @@ class ShardState:
             version, self.n_shards, self.perm, self.pos, self.bounds, views
         )
 
+    def summary(self) -> dict:
+        """JSON-able description of the partition for the introspection
+        endpoint: per-shard row ranges, devices, and user counts (plus
+        the imbalance ratio the sentinel watches).  Pure reads of
+        immutable fields — safe against concurrent publication."""
+        counts = [v.n_users for v in self.views]
+        mean = (sum(counts) / len(counts)) if counts else 0.0
+        return dict(
+            version=self.version,
+            n_shards=self.n_shards,
+            n_users=self.n_users,
+            imbalance=(max(counts) / mean) if mean else 1.0,
+            shards=[
+                dict(
+                    index=v.index,
+                    device=str(v.device),
+                    lo=v.lo,
+                    hi=v.hi,
+                    n_users=v.n_users,
+                )
+                for v in self.views
+            ],
+        )
+
 
 def _spatial_perm(users: np.ndarray, rect: Rect, grid_g: int) -> np.ndarray:
     """Stable sort of user rows by grid cell id — the same ``cx*G + cy``

@@ -1,0 +1,406 @@
+"""The production health layer (ISSUE 9).
+
+Covers the PR's acceptance surface:
+
+* **live endpoints under a writer stream** — ``/snapshot`` resolved
+  against the MVCC snapshot exactly once per request: versions scrape
+  monotone, user-only churn never tears the facility fingerprint, and
+  every route answers 200 while updates publish concurrently;
+* **flight recorder** — an injected writer exception produces a bundle
+  with the full postmortem payload (schema, spans, metrics, engine
+  config/version, exception traceback) that the CLI digests; rate
+  limiting suppresses a dump storm;
+* **sentinel hysteresis** — single outliers never flip health, a
+  sustained shift trips after ``trip_after`` samples, recovery clears
+  after ``clear_after``, and the baseline stays frozen while tripped;
+  absolute ``limit`` rules trip without warmup;
+* **promtext** — counters/gauges render exact sample lines, histograms
+  render monotone cumulative ``_bucket{le=...}`` rows capped by ``+Inf``
+  == count, and a flat snapshot re-renders as summary quantiles;
+* **trend gate** — ``evaluate_trend`` over fixture artefacts: green on
+  a passing latest point, red on a failing one, and latest-point-wins
+  across PRs (history is context, not a verdict);
+* **compile counter / intern overflow** — the jit-cache probe counts
+  distinct-shape compiles; a saturated intern table surfaces exact
+  overflow counts through the tracer and the process registry.
+"""
+
+import http.client
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from benchmarks.run import TREND_GATES, evaluate_trend
+from repro.core.engine import RkNNConfig, RkNNEngine
+from repro.dynamic import DynamicEngine
+from repro.obs import (
+    MetricsRegistry,
+    Rule,
+    Sentinel,
+    Tracer,
+    render_registries,
+    render_snapshot,
+    set_tracer,
+    span,
+)
+from repro.obs.metrics import process_registry
+
+
+def _small(seed=0, M=40, N=200):
+    rng = np.random.default_rng(seed)
+    return rng.random((M, 2)), rng.random((N, 2))
+
+
+def _get(conn: http.client.HTTPConnection, route: str):
+    conn.request("GET", route)
+    r = conn.getresponse()
+    body = r.read()
+    return r.status, body
+
+
+# ---------------------------------------------------------------- endpoints
+def test_endpoints_under_writer_stream():
+    """Every route serves while updates publish; /snapshot versions are
+    monotone and user-only churn never tears the facility fingerprint
+    (both fields come from ONE atomically-read snapshot)."""
+    F, U = _small()
+    dyn = DynamicEngine(F, U, RkNNConfig(backend="dense-ref"))
+    srv = dyn.serve_obs(port=0)
+    done = threading.Event()
+    n_updates = 12
+
+    def writer():
+        rng = np.random.default_rng(1)
+        try:
+            for _ in range(n_updates):
+                ids = rng.choice(len(U), 20, replace=False)
+                pts = rng.random((20, 2))
+                dyn.apply_updates(user_move=(ids, pts))
+        finally:
+            done.set()
+
+    conn = http.client.HTTPConnection("127.0.0.1", srv.port, timeout=5)
+    try:
+        th = threading.Thread(target=writer, daemon=True)
+        th.start()
+        versions, fps, users = [], set(), set()
+        while not done.is_set() or not versions:
+            code, body = _get(conn, "/snapshot")
+            assert code == 200
+            snap = json.loads(body)
+            versions.append(snap["version"])
+            fps.add(snap["fingerprint"])
+            users.add(snap["n_users"])
+        th.join(timeout=10)
+        assert versions == sorted(versions)  # monotone under the stream
+        assert versions[-1] >= 1
+        assert len(fps) == 1  # facilities untouched: one fingerprint only
+        assert users == {len(U)}  # moves never change cardinality
+        final = json.loads(_get(conn, "/snapshot")[1])
+        assert final["version"] == n_updates
+        assert final["device_bytes"]["total"] > 0
+
+        code, body = _get(conn, "/metrics")
+        assert code == 200 and body.startswith(b"# TYPE")
+        code, body = _get(conn, "/spans?n=8")
+        assert code == 200
+        payload = json.loads(body)
+        assert {"spans", "dropped", "intern_overflows"} <= payload.keys()
+        code, body = _get(conn, "/explain")
+        assert code == 200
+        code, body = _get(conn, "/healthz")
+        assert code == 200 and json.loads(body)["ok"] is True
+        assert _get(conn, "/nope")[0] == 404
+    finally:
+        conn.close()
+        srv.close()
+
+
+# ------------------------------------------------------------------ flight
+@pytest.fixture
+def tracer():
+    t = Tracer(capacity=1 << 10)
+    prev = set_tracer(t)
+    t.enable()
+    yield t
+    set_tracer(prev)
+
+
+def test_flight_bundle_on_injected_exception(tmp_path, tracer):
+    F, U = _small(seed=2)
+    dyn = DynamicEngine(
+        F, U,
+        RkNNConfig(
+            backend="dense-ref", flight_recorder=True, flight_dir=str(tmp_path)
+        ),
+    )
+    dyn.query(0, 5)  # spans + metrics to capture
+    bad = np.array([len(U) + 7])  # out-of-range id: the writer must raise
+    with pytest.raises(Exception):
+        dyn.apply_updates(user_move=(bad, np.zeros((1, 2))))
+
+    bundles = sorted(tmp_path.glob("*.json"))
+    assert len(bundles) == 1
+    bundle = json.loads(bundles[0].read_text())
+    assert bundle["schema"] == "rknn-flight/1"
+    assert bundle["reason"] == "exception:apply_updates"
+    assert bundle["exception"]["type"] in ("ValueError", "IndexError")
+    assert any("apply_updates" in ln for ln in bundle["exception"]["traceback"])
+    assert bundle["engine"]["class"] == "DynamicEngine"
+    assert bundle["engine"]["n_users"] == len(U)
+    assert bundle["engine"]["config"]["flight_recorder"] is True
+    assert isinstance(bundle["spans"], list) and bundle["spans"]
+    assert any(k.startswith("phase_s") for k in bundle["metrics"])
+    assert bundle["metrics"]["queries"] >= 1
+
+    # the CLI digests it (postmortem replay path)
+    from repro.obs.__main__ import _digest_postmortem
+
+    assert _digest_postmortem(str(bundles[0]), slowest=3) == 0
+
+    # rate limiting: an immediate second failure is suppressed, counted
+    before = process_registry().counter("flight.suppressed").value
+    with pytest.raises(Exception):
+        dyn.apply_updates(user_move=(bad, np.zeros((1, 2))))
+    assert len(sorted(tmp_path.glob("*.json"))) == 1
+    assert process_registry().counter("flight.suppressed").value == before + 1
+
+
+def test_flight_context_manager_dumps_on_block_exception(tmp_path):
+    from repro.obs import FlightRecorder
+
+    F, U = _small(seed=3)
+    eng = RkNNEngine(F, U, RkNNConfig(backend="dense-ref"))
+    with pytest.raises(RuntimeError):
+        with FlightRecorder(eng, dir=str(tmp_path), min_interval_s=0.0):
+            raise RuntimeError("boom")
+    assert eng.flight is None  # disarmed on exit
+    [bundle] = sorted(tmp_path.glob("*.json"))
+    payload = json.loads(bundle.read_text())
+    assert payload["reason"] == "exception:block"
+    assert payload["exception"]["message"] == "boom"
+
+
+# ---------------------------------------------------------------- sentinel
+def _fed_sentinel(**rule_kw):
+    vals = []
+    kw = dict(direction="high", warmup=4, trip_after=3, clear_after=2)
+    kw.update(rule_kw)
+    rule = Rule("lat", lambda: vals[-1] if vals else None, **kw)
+    s = Sentinel([rule], registry=MetricsRegistry())
+
+    def feed(v):
+        vals.append(float(v))
+        return s.observe()
+
+    return s, feed
+
+
+def test_sentinel_single_outlier_never_flaps():
+    s, feed = _fed_sentinel()
+    for _ in range(6):
+        assert feed(1.0)
+    assert feed(25.0)  # one GC pause / cold compile: breach, no trip
+    assert feed(1.0)  # streak reset
+    assert feed(25.0)
+    assert feed(1.0)
+    assert s.healthy
+    assert s.state()["lat"]["trips"] == 0
+
+
+def test_sentinel_trips_on_sustained_shift_then_clears():
+    s, feed = _fed_sentinel()
+    for _ in range(6):
+        feed(1.0)
+    baseline = s._states["lat"].mean
+    assert feed(25.0)  # streak 1
+    assert feed(25.0)  # streak 2
+    assert not feed(25.0)  # streak 3 == trip_after: tripped
+    assert not s.healthy
+    assert not feed(25.0)  # persisting does NOT re-learn the baseline
+    assert s._states["lat"].mean == pytest.approx(baseline)
+    assert not feed(1.0)  # clear_after=2: one healthy sample isn't enough
+    assert feed(1.0)  # second clears
+    assert s.healthy
+    assert s.state()["lat"]["trips"] == 1
+
+
+def test_sentinel_low_direction_and_absolute_limit():
+    # hit-ratio style rule: bad side is LOW
+    s, feed = _fed_sentinel(direction="low")
+    for _ in range(6):
+        feed(0.9)
+    for _ in range(3):
+        feed(0.1)
+    assert not s.healthy
+    # absolute limit trips during warmup — no baseline needed
+    s2, feed2 = _fed_sentinel(limit=1.5)
+    for _ in range(3):
+        feed2(2.0)
+    assert not s2.healthy
+    assert "limit" in s2.state()["lat"]["last_breach"]
+
+
+def test_sentinel_skips_none_values():
+    s, feed = _fed_sentinel()
+    rule = Rule("quiet", lambda: None)
+    s.add_rule(rule)
+    for _ in range(10):
+        feed(1.0)
+    assert s.healthy
+    assert s.state()["quiet"]["samples"] == 0
+
+
+# ---------------------------------------------------------------- promtext
+def test_promtext_counter_gauge_golden():
+    reg = MetricsRegistry()
+    reg.counter("query.count", backend="grid").inc(3)
+    reg.gauge("mvcc.version_lag").set(2.0)
+    lines = render_registries(reg).splitlines()
+    assert "# TYPE mvcc_version_lag gauge" in lines
+    assert "mvcc_version_lag 2.0" in lines
+    assert "# TYPE query_count counter" in lines
+    assert 'query_count{backend="grid"} 3' in lines
+
+
+def test_promtext_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("phase_s", phase="filter", backend="grid")
+    for v in (0.5, 0.5, 0.5, 2.0):
+        h.observe(v)
+    text = render_registries(reg)
+    buckets = []
+    for ln in text.splitlines():
+        if ln.startswith("phase_s_bucket"):
+            le = ln.split('le="')[1].split('"')[0]
+            buckets.append((le, int(ln.rsplit(" ", 1)[1])))
+    assert buckets[-1] == ("+Inf", 4)
+    cums = [c for _le, c in buckets]
+    assert cums == sorted(cums)  # cumulative: monotone nondecreasing
+    edges = [float(le) for le, _c in buckets[:-1]]
+    assert edges == sorted(edges)
+    # a le=0.5-covering bucket exists with exactly the three fast samples
+    assert any(c == 3 and e >= 0.5 for e, c in zip(edges, cums))
+    assert "phase_s_count" in text and "phase_s_sum" in text
+    assert f'phase_s_count{{backend="grid",phase="filter"}} 4' in text
+
+
+def test_promtext_snapshot_rerender_quantiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("phase_s", phase="verify")
+    for v in (0.1,) * 10:
+        h.observe(v)
+    reg.counter("query.count").inc(7)
+    text = render_snapshot(reg.snapshot())
+    assert "query_count 7" in text
+    assert 'quantile="0.5"' in text
+    assert "phase_s_count" in text
+
+
+def test_promtext_sanitizes_names_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("weird.name-2", tag='a"b\nc').inc()
+    text = render_registries(reg)
+    assert "weird_name_2" in text
+    assert '\\"' in text and "\\n" in text
+
+
+# -------------------------------------------------------------- trend gate
+def _bench_fixture(tmp_path, pr: int, ratio: float) -> str:
+    rows = [
+        dict(
+            bench="obs_overhead",
+            name="obs_overhead",
+            us_per_call=1.0,
+            derived=f"ratio={ratio:.3f} ok={ratio <= 1.03} off=1.0ms on=1.0ms",
+        )
+    ]
+    path = tmp_path / f"BENCH_{pr}.json"
+    path.write_text(json.dumps({"meta": {}, "rows": rows}))
+    return str(path)
+
+
+def test_trend_gate_green_on_passing_latest(tmp_path):
+    res = evaluate_trend([_bench_fixture(tmp_path, 1, 1.01)])
+    assert not res["failures"]
+    assert any(ln.startswith("PASS obs-overhead") for ln in res["lines"])
+    assert any(ln.startswith("SKIP") for ln in res["lines"])  # others no data
+
+
+def test_trend_gate_red_on_failing_latest(tmp_path):
+    res = evaluate_trend([_bench_fixture(tmp_path, 1, 1.20)])
+    assert len(res["failures"]) == 1
+    assert "obs-overhead" in res["failures"][0]
+    assert "> max" in res["failures"][0]
+
+
+def test_trend_gate_latest_point_wins(tmp_path):
+    paths = [
+        _bench_fixture(tmp_path, 1, 1.20),  # history: a regression...
+        _bench_fixture(tmp_path, 2, 1.01),  # ...already fixed by pr2
+    ]
+    res = evaluate_trend(paths)
+    assert not res["failures"]
+    [line] = [ln for ln in res["lines"] if "obs-overhead" in ln]
+    assert "latest=pr2" in line and "pr1:1.2" in line  # history still shown
+
+
+def test_trend_gate_green_on_committed_trajectory():
+    """The repo's own committed BENCH_*.json must grade green — this is
+    the same evaluation CI runs via ``--trend --gate``."""
+    res = evaluate_trend()
+    assert not res["failures"], "\n".join(res["failures"])
+    assert any(ln.startswith("PASS") for ln in res["lines"])
+
+
+def test_trend_gate_declares_health_tolerance():
+    [g] = [g for g in TREND_GATES if g["id"] == "health-overhead"]
+    assert g["max"] == 1.05 and g["key"] == "ratio"
+
+
+# ------------------------------------------------- compile counter / intern
+def test_compile_counter_counts_distinct_shapes():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.obs import track_jit
+
+    f = track_jit(jax.jit(lambda x: x * 2), "health_test_fn")
+    if not hasattr(f, "__wrapped_jit__"):
+        pytest.skip("jit cache-size probe unavailable on this jax")
+    f(jnp.ones((3,)))
+    f(jnp.ones((3,)))  # cache hit: not a compile
+    f(jnp.ones((5,)))  # new shape: recompile
+    found = [
+        m
+        for labels, m in process_registry().find("compile.count")
+        if labels.get("fn") == "health_test_fn"
+    ]
+    assert found and found[0].value == 2
+    t = [
+        m
+        for labels, m in process_registry().find("compile.time_s")
+        if labels.get("fn") == "health_test_fn"
+    ]
+    assert t and t[0].value > 0.0
+
+
+def test_intern_overflow_saturation_counter():
+    t = Tracer(capacity=256, max_interned=4)
+    prev = set_tracer(t)
+    try:
+        t.enable()
+        for i in range(32):
+            with span(f"distinct-name-{i}"):
+                pass
+        assert t.intern_overflows > 0
+        # the process registry surfaces it as a derived gauge
+        snap = process_registry().snapshot()
+        assert snap["obs.intern_overflow"] == float(t.intern_overflows)
+        # overflow names degrade to the sentinel slot, never crash decode
+        names = {r["name"] for r in t.records()}
+        assert names  # records still decodable
+    finally:
+        set_tracer(prev)
