@@ -1038,3 +1038,107 @@ def health_overhead(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[di
             ),
         )
     ]
+
+
+# ------------------------------------------------ zero-cold-start (PR 10)
+def cold_start(scale: float = DEFAULT_SCALE, n_queries: int = 0) -> list[dict]:
+    """Process start → first query wave served: cold build vs warm restore.
+
+    Cold arm: construct an engine and serve a wave of distinct queries —
+    every scene is pruned+built, every index packed, from nothing.  The
+    engine then exports its state as an ``rknn-store/1`` step.  Warm arm:
+    construct with ``warm_store=`` pointing at that step and serve the
+    same wave — the working set is adopted, not rebuilt.  XLA compilation
+    is pre-warmed on a throwaway engine before either arm: it is
+    per-process, identical in both arms, and not persistable state; the
+    contest is the amortized engine state (scenes, packed indexes, cell
+    bucketing).  ``identical`` additionally folds in a small save/restore
+    round-trip across **every** registered concrete backend.  Gates:
+    ``speedup >= 3`` at CI scale (≥10x at full scale, BENCH_10),
+    ``identical=True``.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core.backends import concrete_backends
+
+    rng = np.random.default_rng(0)
+    F, U = _fu("USA", 800, scale)
+    # the contest is amortized *construction* state, so keep the per-query
+    # cast (pure compute, identical in both arms, never persisted) from
+    # drowning the signal at full scale
+    U = U[:40_000]
+    q_n = n_queries or 32
+    qs = [int(q) for q in rng.choice(len(F), size=min(q_n, len(F)), replace=False)]
+    k = 16
+    cfg = dict(backend="grid", grid_g=64)
+
+    pre = RkNNEngine(F[:64], U[:512], RkNNConfig(**cfg))
+    pre.query(0, k)
+
+    def _wave(eng):
+        return [eng.query(q, k) for q in qs]
+
+    store = tempfile.mkdtemp(prefix="rknn_store_")
+    try:
+        def _cold():
+            eng = RkNNEngine(F, U, RkNNConfig(**cfg))
+            return eng, _wave(eng)
+
+        (cold_eng, cold_res), t_cold = timed(_cold)
+        _, t_save = timed(lambda: cold_eng.save_state(store))
+
+        def _warm():
+            eng = RkNNEngine(F, U, RkNNConfig(**cfg, warm_store=store))
+            return eng, _wave(eng)
+
+        (warm_eng, warm_res), t_warm = timed(_warm)
+        restore_s = sum(
+            c.get("seconds", 0.0)
+            for c in warm_eng.persist_info["categories"].values()
+        )
+        rebuilt = warm_eng._snap.scene_cache.misses
+        identical = all(
+            np.array_equal(np.asarray(c.mask), np.asarray(w.mask))
+            and np.array_equal(np.asarray(c.counts), np.asarray(w.counts))
+            for c, w in zip(cold_res, warm_res)
+        )
+
+        # every registered concrete backend round-trips bit-identically
+        n_backends = 0
+        F2, U2 = F[:60], U[:400]
+        for b in concrete_backends():
+            bdir = tempfile.mkdtemp(prefix="rknn_bstore_")
+            try:
+                c = RkNNEngine(F2, U2, RkNNConfig(backend=b, grid_g=16))
+                want = [c.query(q, 8) for q in (0, 3)]
+                c.save_state(bdir)
+                w = RkNNEngine(
+                    F2, U2, RkNNConfig(backend=b, grid_g=16, warm_store=bdir)
+                )
+                got = [w.query(q, 8) for q in (0, 3)]
+                identical &= all(
+                    np.array_equal(np.asarray(a.mask), np.asarray(g.mask))
+                    and np.array_equal(np.asarray(a.counts), np.asarray(g.counts))
+                    for a, g in zip(want, got)
+                )
+                n_backends += 1
+            finally:
+                shutil.rmtree(bdir, ignore_errors=True)
+
+        speedup = t_cold / max(t_warm, 1e-9)
+        return [
+            dict(
+                name="cold_start",
+                us_per_call=t_cold / len(qs) * 1e6,
+                derived=(
+                    f"speedup={speedup:.1f}x identical={identical} "
+                    f"cold_s={t_cold:.3f} warm_s={t_warm:.3f} "
+                    f"save_s={t_save:.3f} restore_s={restore_s:.3f} "
+                    f"rebuilt={rebuilt} queries={len(qs)} "
+                    f"backends={n_backends} F={len(F)} U={len(U)} k={k}"
+                ),
+            )
+        ]
+    finally:
+        shutil.rmtree(store, ignore_errors=True)

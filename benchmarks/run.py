@@ -58,6 +58,7 @@ BENCHES = [
     ("sharded_scaling", bench_rknn.sharded_scaling),
     ("obs_overhead", bench_rknn.obs_overhead),
     ("health_overhead", bench_rknn.health_overhead),
+    ("cold_start", bench_rknn.cold_start),
 ]
 
 #: The declared cross-PR tolerances (``--trend --gate``).  ``row`` is a
@@ -83,6 +84,8 @@ TREND_GATES = [
     dict(id="shard-scaling-monotone", row="_scaling", flag="monotone=True"),
     dict(id="shard-scaling-speedup", row="_scaling", key="s1/s4", min=1.5),
     dict(id="refit-drift-win", row="update_drift", key="speedup", min=1.0),
+    dict(id="cold-start", row="cold_start", key="speedup", min=3.0),
+    dict(id="cold-start-identical", row="cold_start", flag="identical=True"),
 ]
 
 _NUM_RE = re.compile(r"-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")

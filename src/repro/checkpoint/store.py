@@ -11,6 +11,18 @@ Layout:  ``<dir>/step_<N>/{manifest.json, <leaf-id>.npy...}``
   double-buffer policy);
 * ``restore`` optionally ``device_put``s straight into a sharding tree so
   a 512-way FSDP state never materialises unsharded on one host.
+
+The same atomic-rename machinery also backs the *named-category* state
+store used by :mod:`repro.persist` (``save_state`` / ``load_state``): a
+manifest maps category names to per-category fingerprints, JSON metadata,
+and ``.npy`` array leaves, so a schema like ``rknn-store/1`` can
+invalidate one stale category without discarding the rest.
+
+Completeness contract: a step only counts as restorable when its
+manifest exists AND every leaf file the manifest lists is present —
+stranded ``step_*.tmp`` leftovers (crash mid-write) and steps whose
+leaves were lost (partial copy, interrupted gc) are skipped, never
+tripped over.
 """
 
 from __future__ import annotations
@@ -25,9 +37,28 @@ import numpy as np
 
 import jax
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "save_state",
+    "load_state",
+    "load_arrays",
+    "AsyncCheckpointer",
+]
 
 _SAFE = re.compile(r"[^A-Za-z0-9_.\-]")
+
+
+def _json_default(o):
+    """Manifest metadata tolerates numpy scalars/arrays (PruneStats etc.)."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"Object of type {type(o).__name__} is not JSON serializable")
 
 
 def _flatten(tree):
@@ -41,6 +72,30 @@ def _flatten(tree):
     return out
 
 
+def _write_arrays(folder: str, arrays: dict, *, prefix: str = "") -> dict:
+    """Save ``{key: array}`` as ``.npy`` leaves; returns manifest entries."""
+    entries = {}
+    for key, leaf in arrays.items():
+        arr = np.asarray(leaf)
+        fn = _SAFE.sub("_", f"{prefix}{key}".replace("/", "__")) + ".npy"
+        np.save(os.path.join(folder, fn), arr)
+        entries[key] = {
+            "file": fn,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    return entries
+
+
+def _publish(directory: str, tmp: str, final: str, keep: int) -> str:
+    """Atomic rename publish + retention gc (shared by both store kinds)."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(directory, keep)
+    return final
+
+
 def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3, extra: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:012d}")
@@ -48,24 +103,11 @@ def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3, extra: di
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    flat = _flatten(tree)
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-    for key, leaf in flat.items():
-        arr = np.asarray(leaf)
-        fn = f"{key.replace('/', '__')}.npy"
-        np.save(os.path.join(tmp, fn), arr)
-        manifest["leaves"][key] = {
-            "file": fn,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-        }
+    manifest = {"step": step, "leaves": _write_arrays(tmp, _flatten(tree)), "extra": extra or {}}
+    # manifest last: its presence marks the leaves as fully written
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic publish
-    _gc(directory, keep)
-    return final
+        json.dump(manifest, f, default=_json_default)
+    return _publish(directory, tmp, final, keep)
 
 
 def _gc(directory: str, keep: int) -> None:
@@ -74,11 +116,35 @@ def _gc(directory: str, keep: int) -> None:
         shutil.rmtree(os.path.join(directory, f"step_{s:012d}"), ignore_errors=True)
 
 
+def _manifest_files(manifest: dict):
+    """Every leaf filename a manifest references (param-tree ``leaves``
+    and named-category ``categories`` layouts alike)."""
+    for meta in manifest.get("leaves", {}).values():
+        yield meta["file"]
+    for cat in manifest.get("categories", {}).values():
+        for meta in cat.get("arrays", {}).values():
+            yield meta["file"]
+
+
+def _step_complete(folder: str) -> bool:
+    """Manifest present AND every leaf it lists exists on disk."""
+    path = os.path.join(folder, "manifest.json")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    return all(
+        os.path.exists(os.path.join(folder, fn)) for fn in _manifest_files(manifest)
+    )
+
+
 def _all_steps(directory: str) -> list[int]:
     out = []
     for name in os.listdir(directory):
+        # fullmatch excludes stranded ``step_*.tmp`` crash leftovers
         m = re.fullmatch(r"step_(\d+)", name)
-        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+        if m and _step_complete(os.path.join(directory, name)):
             out.append(int(m.group(1)))
     return out
 
@@ -95,11 +161,16 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None, shard
 
     ``shardings``: optional pytree congruent with ``tree_like``; leaves are
     ``jax.sharding.Sharding`` used to place each array directly.
+
+    With ``step=None`` the newest *complete* step is used — incomplete
+    ``.tmp`` leftovers and steps with missing leaf files are skipped.
+    An explicitly requested step with a missing leaf raises a
+    ``FileNotFoundError`` naming the leaf (not a bare ``np.load`` crash).
     """
     if step is None:
         step = latest_step(directory)
         if step is None:
-            raise FileNotFoundError(f"no checkpoint under {directory}")
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
     folder = os.path.join(directory, f"step_{step:012d}")
     with open(os.path.join(folder, "manifest.json")) as f:
         manifest = json.load(f)
@@ -116,7 +187,15 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None, shard
     out = []
     for i, (path, leaf) in enumerate(paths_and_leaves):
         key = _SAFE.sub("_", "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path))
-        arr = np.load(os.path.join(folder, leaves_meta[key]["file"]))
+        leaf_path = os.path.join(folder, leaves_meta[key]["file"])
+        if not os.path.exists(leaf_path):
+            raise FileNotFoundError(
+                f"checkpoint step {step} lists leaf {key!r} but "
+                f"{leaves_meta[key]['file']} is missing — the step is "
+                f"incomplete (crash mid-write?); restore with step=None "
+                f"to fall back to the newest complete step"
+            )
+        arr = np.load(leaf_path)
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
         if sh_leaves is not None:
@@ -124,6 +203,76 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None, shard
         else:
             out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+# --------------------------------------------------------------------------
+# named-category state store (the repro.persist substrate)
+# --------------------------------------------------------------------------
+
+
+def save_state(
+    directory: str,
+    step: int,
+    categories: dict,
+    *,
+    schema: str,
+    keep: int = 3,
+    extra: dict | None = None,
+) -> str:
+    """Write named state categories atomically as one versioned step.
+
+    ``categories`` maps a category name to ``{"fingerprint": str,
+    "meta": dict, "arrays": {key: np.ndarray}}``.  The manifest carries
+    the schema string and the per-category fingerprints so a reader can
+    invalidate one stale category without touching the rest.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:012d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"schema": schema, "step": int(step), "categories": {}, "extra": extra or {}}
+    for name, cat in categories.items():
+        manifest["categories"][name] = {
+            "fingerprint": str(cat.get("fingerprint", "")),
+            "meta": cat.get("meta", {}),
+            "arrays": _write_arrays(tmp, cat.get("arrays") or {}, prefix=f"{name}__"),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, default=_json_default)
+    return _publish(directory, tmp, final, keep)
+
+
+def load_state(
+    directory: str, step: int | None = None, *, schema: str | None = None
+) -> tuple[dict, str]:
+    """Load the manifest of the newest complete step (arrays stay on disk
+    — fetch per category with :func:`load_arrays`).  Returns
+    ``(manifest, folder)``.  ``schema`` (when given) must match the
+    stored schema string exactly — a future-major store is rejected
+    rather than misread."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete state store under {directory}")
+    folder = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(folder, "manifest.json")) as f:
+        manifest = json.load(f)
+    if schema is not None and manifest.get("schema") != schema:
+        raise ValueError(
+            f"state store schema {manifest.get('schema')!r} does not match "
+            f"expected {schema!r}"
+        )
+    return manifest, folder
+
+
+def load_arrays(folder: str, entry: dict) -> dict:
+    """Materialize one category's arrays from its manifest entry."""
+    out = {}
+    for key, meta in entry.get("arrays", {}).items():
+        out[key] = np.load(os.path.join(folder, meta["file"]))
+    return out
 
 
 class AsyncCheckpointer:

@@ -50,6 +50,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.bvh import (
+    BVH,
     build_bvh,
     bvh_hit_counts,
     bvh_hit_counts_batch,
@@ -58,6 +59,7 @@ from repro.core.bvh import (
 )
 from repro.core.geometry import Rect
 from repro.core.grid import (
+    OccluderGrid,
     build_grid,
     grid_hit_counts_batch_jnp,
     grid_hit_counts_jnp,
@@ -214,6 +216,26 @@ class Backend:
         """Host-side batch stacking; the returned object is what
         :meth:`count_batch` dispatches.  Runs inside ``t_filter_s``."""
         return None
+
+    # ---- persistence (repro.persist) ------------------------------------
+    def export_state(self, index) -> tuple[str, dict, dict] | None:
+        """Serializable form of a built index: ``(kind, arrays, meta)``.
+
+        ``arrays`` maps names to host numpy arrays; ``meta`` is JSON-safe.
+        ``None`` means the backend keeps no persistable index state (the
+        dense family stacks scene coefficients directly; brute has no
+        geometry) — such backends rebuild for free on restore.  ``kind``
+        tags the encoding so :meth:`import_state` can reject a payload it
+        does not understand.
+        """
+        return None
+
+    def import_state(self, kind: str, arrays: dict, meta: dict):
+        """Inverse of :meth:`export_state`: rebuild the in-memory index
+        object from its serialized form.  Raises ``ValueError`` on an
+        unrecognized ``kind`` (a stale or foreign payload must fall back
+        to a cold build, not be misread)."""
+        raise ValueError(f"backend {self.name!r} cannot import state kind {kind!r}")
 
     # ---- verify phase (device) ------------------------------------------
     def count(self, req: QueryRequest) -> np.ndarray:
@@ -384,6 +406,47 @@ class GridBackend(Backend):
             if g is not None:
                 return g, True
         return self.build_index(new_scene, grid_g=grid_g), False
+
+    def export_state(self, index) -> tuple[str, dict, dict] | None:
+        if index is None:
+            return None
+        arrays = {
+            "base": index.base,
+            "lists": index.lists,
+            "coeffs": index.coeffs,
+        }
+        r = index.rect
+        meta = {
+            "G": int(index.G),
+            "rect": [float(r.xmin), float(r.ymin), float(r.xmax), float(r.ymax)],
+            "plane_pads": [],
+        }
+        # the pallas variants hang packed per-cell coefficient planes off
+        # the shared grid object, keyed by lane pad — persist them so a
+        # warm restore skips the re-pack too
+        planes = getattr(index, "_cell_planes", None) or {}
+        for pad in sorted(planes):
+            meta["plane_pads"].append(int(pad))
+            arrays[f"planes_{int(pad)}"] = planes[pad]
+        return "grid", arrays, meta
+
+    def import_state(self, kind: str, arrays: dict, meta: dict):
+        if kind != "grid":
+            return super().import_state(kind, arrays, meta)
+        g = OccluderGrid(
+            base=np.ascontiguousarray(arrays["base"], np.int32),
+            lists=np.ascontiguousarray(arrays["lists"], np.int32),
+            coeffs=np.ascontiguousarray(arrays["coeffs"], np.float32),
+            G=int(meta["G"]),
+            rect=Rect(*(float(v) for v in meta["rect"])),
+        )
+        pads = meta.get("plane_pads") or []
+        if pads:
+            g._cell_planes = {
+                int(p): np.ascontiguousarray(arrays[f"planes_{int(p)}"], np.float32)
+                for p in pads
+            }
+        return g
 
     def count(self, req: QueryRequest) -> np.ndarray:
         g = req.index
@@ -687,6 +750,22 @@ class BvhBackend(Backend):
             if bvh is not None:
                 return bvh, True
         return self.build_index(new_scene, grid_g=grid_g), False
+
+    def export_state(self, index) -> tuple[str, dict, dict] | None:
+        if index is None:
+            return None
+        arrays = {"left": index.left, "right": index.right, "bbox": index.bbox}
+        return "bvh", arrays, {"n_tris": int(index.n_tris)}
+
+    def import_state(self, kind: str, arrays: dict, meta: dict):
+        if kind != "bvh":
+            return super().import_state(kind, arrays, meta)
+        return BVH(
+            left=np.ascontiguousarray(arrays["left"], np.int32),
+            right=np.ascontiguousarray(arrays["right"], np.int32),
+            bbox=np.ascontiguousarray(arrays["bbox"], np.float32),
+            n_tris=int(meta["n_tris"]),
+        )
 
     def count(self, req: QueryRequest) -> np.ndarray:
         bvh = req.index

@@ -107,6 +107,12 @@ class RkNNConfig:
     #: bundle under ``flight_dir``.
     flight_recorder: bool = False
     flight_dir: str = "flight"
+    #: Warm-start from a ``rknn-store/1`` directory (:mod:`repro.persist`):
+    #: at construction, every fingerprint-matching state category (scenes,
+    #: indexes, kernel bucketing, shards, planner profile) is adopted into
+    #: the fresh snapshot.  Best-effort — a missing or stale store leaves a
+    #: fully functional cold engine.
+    warm_store: str | None = None
 
 
 class EngineStats:
@@ -317,12 +323,19 @@ class RkNNEngine:
         self._sentinel = None
         self._obs_servers: list = []
         self._devbytes_cache: tuple | None = None
+        #: Last persist operation's report (:mod:`repro.persist`): store
+        #: path, schema, and per-category restored/stale/absent statuses.
+        self.persist_info: dict | None = None
         if config.flight_recorder:
             from repro.obs.flight import FlightRecorder
 
             self.flight = FlightRecorder(self, dir=config.flight_dir)
         if mesh is not None:
             self._init_mesh(self._snap, mesh)
+        if config.warm_store:
+            from repro.persist import warm_start
+
+            warm_start(self, config.warm_store)
 
     def _make_snapshot(
         self,
@@ -403,6 +416,57 @@ class RkNNEngine:
             return float(self._snap.pad_waste(self._snap.rect, self.config.grid_g))
         except Exception:
             return None
+
+    # ------------------------------------------------------------------
+    # persistence (repro.persist — versioned warm-start state store)
+    # ------------------------------------------------------------------
+    def save_state(self, directory: str, *, keep: int = 3) -> str:
+        """Export the served snapshot's amortized state (scenes, packed
+        indexes, kernel bucketing, planner profile, shard partition) as
+        the next ``rknn-store/1`` step under ``directory``.  Atomic:
+        readers of the store always see a complete step.  Returns the
+        published step folder."""
+        from repro.persist import save_engine_state
+
+        return save_engine_state(self, directory, keep=keep)
+
+    def restore(self, directory: str) -> dict:
+        """Hot-adopt a ``rknn-store/1`` store into this **live** engine:
+        builds a snapshot around the store's dataset, adopts every
+        fingerprint-matching category, and publishes it as MVCC version
+        N+1 via the atomic swap — in-flight readers keep serving N.
+        Returns the per-category status report (also on
+        ``self.persist_info``)."""
+        from repro.persist import restore_engine
+
+        return restore_engine(self, directory)
+
+    def _persist_note(self, op: str, category: str, nbytes: int, seconds) -> None:
+        """Record one category's persist traffic (registry dedupes by
+        label, so these are stable per-category instruments)."""
+        self.metrics.gauge("persist.bytes", category=category, op=op).set(
+            float(nbytes)
+        )
+        if seconds is not None:
+            self.metrics.histogram(f"persist.{op}_s", category=category).observe(
+                float(seconds)
+            )
+
+    def _persist_extra_fingerprints(self, snap: EngineSnapshot) -> dict:
+        """Subclass hook: expected fingerprints for engine-specific
+        categories (ShardedEngine adds ``shards``)."""
+        return {}
+
+    def _persist_extra_categories(self, snap: EngineSnapshot) -> dict:
+        """Subclass hook: extra ``{name: {fingerprint, meta, arrays}}``
+        categories to persist."""
+        return {}
+
+    def _persist_adopt_extra(self, snap: EngineSnapshot, name: str, entry, arrays):
+        """Subclass hook: adopt one engine-specific category (fingerprint
+        already matched).  Return the adopted item count, or ``None`` if
+        the category is not recognized."""
+        return None
 
     def _phase_hist(self, phase: str, backend: str) -> Histogram:
         key = (phase, backend)

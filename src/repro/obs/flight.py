@@ -181,6 +181,7 @@ class FlightRecorder:
                 shards=(
                     shard_state.summary() if shard_state is not None else None
                 ),
+                persist=_jsonable(getattr(engine, "persist_info", None)),
             ),
             planner=planner,
             metrics=_jsonable(metrics),

@@ -152,6 +152,7 @@ class _Handler(BaseHTTPRequestHandler):
             scene_cache_len=(
                 len(snap.scene_cache) if snap.scene_cache is not None else 0
             ),
+            persist=getattr(engine, "persist_info", None),
         )
 
 

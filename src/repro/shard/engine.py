@@ -427,6 +427,60 @@ class ShardedEngine(DynamicEngine):
         return st
 
     # ------------------------------------------------------------------
+    # persistence hooks (repro.persist: the ``shards`` category)
+    # ------------------------------------------------------------------
+    def _persist_extra_fingerprints(self, snap: EngineSnapshot) -> dict:
+        from repro.persist.store import _rect_parts, content_digest
+
+        return {
+            "shards": content_digest(
+                "shards",
+                snap.users,
+                _rect_parts(snap.rect),
+                int(self.config.grid_g),
+                int(self.n_shards),
+            )
+        }
+
+    def _persist_extra_categories(self, snap: EngineSnapshot) -> dict:
+        st = self._shard_state_for(snap)
+        return {
+            "shards": {
+                "meta": {"n_shards": int(st.n_shards)},
+                "arrays": {"perm": st.perm, "pos": st.pos, "bounds": st.bounds},
+            }
+        }
+
+    def _persist_adopt_extra(self, snap: EngineSnapshot, name: str, entry, arrays):
+        if name != "shards":
+            return None
+        # the partition arrays come from the store; the per-shard device
+        # views are re-placed locally (device topology is host state, not
+        # store state)
+        perm = np.ascontiguousarray(arrays["perm"], np.int64)
+        pos = np.ascontiguousarray(arrays["pos"], np.int64)
+        bounds = np.ascontiguousarray(arrays["bounds"], np.int64)
+        users = snap.users
+        xs = users[:, 0].astype(np.float32)
+        ys = users[:, 1].astype(np.float32)
+        views = []
+        for s in range(self.n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            sl = perm[lo:hi]
+            dev = self._shard_devices[s]
+            views.append(
+                ShardView(
+                    s, dev, snap.version, lo, hi,
+                    jax.device_put(xs[sl], dev),
+                    jax.device_put(ys[sl], dev),
+                )
+            )
+        snap.shard_state = ShardState(
+            snap.version, self.n_shards, perm, pos, bounds, tuple(views)
+        )
+        return self.n_shards
+
+    # ------------------------------------------------------------------
     # the dispatch injection point (covers batches, groups, stream)
     # ------------------------------------------------------------------
     def _mesh_dispatch_for(
